@@ -1,0 +1,98 @@
+"""Shared harness for the paper-experiment benchmarks.
+
+One decentralized-learning experiment = (dataset, partition, strategy,
+rounds).  The paper's four strategies are built here exactly as §IV-A3
+describes; benchmarks vary node count, connectivity k and Morph
+hyperparameters.  Scaled to container size: synthetic CIFAR-like data
+(offline), 16 nodes default — the qualitative ordering the paper claims
+is preserved and asserted in EXPERIMENTS.md §Claims.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import (EpidemicStrategy, FullyConnectedStrategy,
+                        MorphConfig, MorphProtocol, StaticStrategy)
+from repro.data import (StackedBatcher, dirichlet_partition,
+                        make_image_classification, train_test_split)
+from repro.dlrt import DecentralizedRunner, MetricsLog, RunnerConfig
+from repro.models.cnn import cnn_loss, cnn_params
+from repro.optim import sgd
+
+
+@dataclass
+class ExpConfig:
+    n_nodes: int = 16
+    rounds: int = 150
+    eval_every: int = 15
+    k: int = 3                   # connectivity (paper: 3/7/14)
+    alpha: float = 0.1           # Dirichlet non-IID severity
+    num_classes: int = 10
+    image_size: int = 16
+    width: int = 12              # CNN width
+    batch: int = 8
+    lr: float = 0.05
+    n_samples: int = 4000
+    noise: float = 3.0           # class overlap: hard enough that
+                                 # collaboration under non-IID matters
+    seed: int = 0
+    beta: float = 500.0
+    delta_r: int = 5
+    view_extra: int = 2          # |R| random edges (Fig. 2: 2 suffices)
+
+
+def make_strategy(name: str, cfg: ExpConfig):
+    n, k, seed = cfg.n_nodes, cfg.k, cfg.seed
+    if name == "static":
+        deg = k if (n * k) % 2 == 0 else k + 1
+        return StaticStrategy(n=n, degree=deg, seed=seed)
+    if name == "fully-connected":
+        return FullyConnectedStrategy(n=n)
+    if name == "el-oracle":
+        return EpidemicStrategy(n=n, k=k, seed=seed, oracle=True)
+    if name == "morph":
+        return MorphProtocol(MorphConfig(
+            n=n, k=k, view_size=k + cfg.view_extra, beta=cfg.beta,
+            delta_r=cfg.delta_r, seed=seed))
+    raise ValueError(name)
+
+
+def run_experiment(strategy_name: str, cfg: ExpConfig,
+                   progress: bool = False) -> MetricsLog:
+    rng = np.random.default_rng(cfg.seed)
+    ds = make_image_classification(
+        cfg.n_samples, num_classes=cfg.num_classes,
+        image_size=cfg.image_size, noise=cfg.noise, seed=cfg.seed)
+    tr, te = train_test_split(ds, 0.2, seed=cfg.seed)
+    parts = dirichlet_partition(tr.labels, cfg.n_nodes, cfg.alpha, rng)
+    runner = DecentralizedRunner(
+        init_fn=lambda key: cnn_params(
+            key, in_channels=3, num_classes=cfg.num_classes,
+            image_size=cfg.image_size, width=cfg.width),
+        loss_fn=cnn_loss, eval_fn=cnn_loss,
+        optimizer=sgd(cfg.lr),
+        batcher=StackedBatcher(tr, parts, cfg.batch, seed=cfg.seed),
+        test_batch={"images": te.images[:512], "labels": te.labels[:512]},
+        strategy=make_strategy(strategy_name, cfg),
+        cfg=RunnerConfig(n_nodes=cfg.n_nodes, rounds=cfg.rounds,
+                         eval_every=cfg.eval_every, seed=cfg.seed))
+    cb = (lambda r: print(f"  [{strategy_name}] round {r.rnd} "
+                          f"acc {r.mean_accuracy:.3f}", flush=True)) \
+        if progress else None
+    return runner.run(cb)
+
+
+def summarize(log: MetricsLog) -> Dict[str, float]:
+    last = log.records[-1]
+    return {
+        "final_acc": last.mean_accuracy,
+        "best_acc": log.best_accuracy(),
+        "final_loss": last.mean_loss,
+        "internode_var": last.internode_variance,
+        "comm_bytes": last.comm_bytes,
+        "mean_isolated": float(np.mean([r.isolated for r in log.records])),
+    }

@@ -1,0 +1,37 @@
+"""Paper Fig. 3: accuracy / loss / inter-node variance learning curves
+for all four strategies (CSV over rounds).  The headline contrast is
+panel (c): EL's inter-node variance is orders of magnitude above
+Morph's, which tracks the fully-connected bound."""
+from __future__ import annotations
+
+import argparse
+
+from .common import ExpConfig, run_experiment
+
+STRATEGIES = ("fully-connected", "morph", "el-oracle", "static")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--nodes", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    print("fig3,strategy,round,accuracy,loss,internode_var")
+    final_vars = {}
+    for name in STRATEGIES:
+        cfg = ExpConfig(n_nodes=args.nodes, rounds=args.rounds)
+        log = run_experiment(name, cfg)
+        for r in log.records:
+            print(f"fig3,{name},{r.rnd},{r.mean_accuracy:.4f},"
+                  f"{r.mean_loss:.4f},{r.internode_variance:.4f}",
+                  flush=True)
+        final_vars[name] = log.records[-1].internode_variance
+    if final_vars["morph"] > 0:
+        ratio = final_vars["el-oracle"] / max(final_vars["morph"], 1e-6)
+        print(f"fig3_derived,el_var_over_morph_var,{ratio:.1f}")
+    return final_vars
+
+
+if __name__ == "__main__":
+    main()

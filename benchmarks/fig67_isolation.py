@@ -1,0 +1,56 @@
+"""Paper Figs. 6/7: isolated nodes (no incoming connection) per round.
+
+Paper (100 nodes): EL averages 14.1 isolated nodes at k=3, 0.44 at k=7;
+Morph stays below one at every k; Static is ~0 by construction.  Pure
+protocol simulation — no training needed."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import (EpidemicStrategy, MorphConfig, MorphProtocol,
+                        StaticStrategy, isolated_nodes)
+
+
+def mean_isolated(strategy, rounds: int, n: int, params) -> float:
+    vals = []
+    for t in range(rounds):
+        edges, _ = strategy.round_edges(t, params)
+        vals.append(len(isolated_nodes(edges)))
+    return float(np.mean(vals))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=100)
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--ks", type=int, nargs="+", default=[3, 5, 7])
+    args = ap.parse_args(argv)
+
+    n = args.nodes
+    rng = np.random.default_rng(0)
+    params = {"w": rng.normal(size=(n, 64)).astype(np.float32)}
+
+    print("fig67,strategy,k,mean_isolated")
+    out = {}
+    for k in args.ks:
+        el = mean_isolated(EpidemicStrategy(n=n, k=k, seed=0),
+                           args.rounds, n, params)
+        morph = mean_isolated(
+            MorphProtocol(MorphConfig(n=n, k=k, seed=0)),
+            args.rounds, n, params)
+        deg = k if (n * k) % 2 == 0 else k + 1
+        static = mean_isolated(StaticStrategy(n=n, degree=deg, seed=0),
+                               args.rounds, n, params)
+        out[k] = {"el": el, "morph": morph, "static": static}
+        for name, v in out[k].items():
+            print(f"fig67,{name},{k},{v:.2f}", flush=True)
+    print(f"fig67_derived,el_isolated_at_k3,{out[args.ks[0]]['el']:.2f}")
+    print(f"fig67_derived,morph_max_isolated,"
+          f"{max(v['morph'] for v in out.values()):.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks: Pallas (interpret mode on CPU — correctness
+path) vs the pure-jnp oracle (XLA-compiled).  On TPU the same calls
+compile to Mosaic; interpret timings are NOT TPU predictions, they gate
+regressions in the wrapper/padding logic."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, warmup=2, iters=5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6      # us
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[16384, 262144])
+    ap.add_argument("--n", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    print("kernel_bench,kernel,n,d,us_per_call,oracle_us")
+    for d in args.sizes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (args.n, d))
+        w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1),
+                                             (args.n, args.n)))
+        t_cos = _time(lambda a: ops.pairwise_cosine(a, interpret=True), x)
+        t_cos_ref = _time(jax.jit(ref.pairwise_cosine_ref), x)
+        print(f"kernel_bench,pairwise_cosine,{args.n},{d},"
+              f"{t_cos:.0f},{t_cos_ref:.0f}", flush=True)
+        t_mix = _time(lambda a, b: ops.mix(a, b, interpret=True), w, x)
+        t_mix_ref = _time(jax.jit(ref.graph_mix_ref), w, x)
+        print(f"kernel_bench,graph_mix,{args.n},{d},"
+              f"{t_mix:.0f},{t_mix_ref:.0f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Roofline table generator: reads the dry-run JSON records and emits
+the per-(arch x shape x mesh) three-term analysis for EXPERIMENTS.md.
+
+  compute   = HLO_FLOPs / peak_FLOPs        (per chip, trip-corrected)
+  memory    = HLO_bytes / HBM_bw
+  collective= weighted collective bytes / ICI link bw
+
+Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out dryrun_results.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(paths: List[str]) -> List[Dict]:
+    records = []
+    for pattern in paths:
+        for path in sorted(glob.glob(pattern)):
+            with open(path) as f:
+                recs = json.load(f)
+            records.extend(recs if isinstance(recs, list) else [recs])
+    # de-duplicate on (arch, shape, multi_pod), later files win
+    seen = {}
+    for r in records:
+        seen[(r.get("arch"), r.get("shape"), r.get("multi_pod"))] = r
+    return list(seen.values())
+
+
+def fmt_row(r: Dict) -> str:
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | "
+                f"{'multi' if r.get('multi_pod') else 'single'} | "
+                f"SKIP: {r['skipped'][:60]}… ||||||")
+    if "error" in r:
+        return (f"| {r['arch']} | {r['shape']} | "
+                f"{'multi' if r.get('multi_pod') else 'single'} | "
+                f"ERROR ||||||")
+    rf = r["roofline"]
+    dom = rf["dominant"]
+    return (f"| {r['arch']} | {r['shape']} | "
+            f"{'multi' if r.get('multi_pod') else 'single'} | "
+            f"{rf['compute_s'] * 1e3:.1f} | {rf['memory_s'] * 1e3:.1f} | "
+            f"{rf['collective_s'] * 1e3:.1f} | **{dom}** | "
+            f"{rf['useful_flop_ratio']:.2f} | "
+            f"{r.get('compile_s', '-')} |")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--inputs", nargs="+",
+                    default=["dryrun_results.json", "rerun*.json",
+                             "perf_*.json"])
+    ap.add_argument("--csv", action="store_true",
+                    help="CSV lines for benchmarks.run")
+    args = ap.parse_args(argv)
+
+    records = load_records(args.inputs)
+    records.sort(key=lambda r: (r.get("arch", ""), r.get("shape", ""),
+                                bool(r.get("multi_pod"))))
+    if not records:
+        print("roofline,no_records_found,0")
+        return []
+    if args.csv:
+        ok = sum(1 for r in records if "roofline" in r)
+        skip = sum(1 for r in records if "skipped" in r)
+        err = sum(1 for r in records if "error" in r)
+        print(f"roofline,pairs_ok,{ok}")
+        print(f"roofline,pairs_skipped,{skip}")
+        print(f"roofline,pairs_error,{err}")
+        for r in records:
+            if "roofline" in r:
+                rf = r["roofline"]
+                mesh = "multi" if r.get("multi_pod") else "single"
+                print(f"roofline,{r['arch']}|{r['shape']}|{mesh},"
+                      f"dom={rf['dominant']},"
+                      f"c={rf['compute_s']*1e3:.1f}ms,"
+                      f"m={rf['memory_s']*1e3:.1f}ms,"
+                      f"x={rf['collective_s']*1e3:.1f}ms,"
+                      f"useful={rf['useful_flop_ratio']:.2f}")
+    else:
+        print("| arch | shape | mesh | compute ms | memory ms | "
+              "collective ms | dominant | useful FLOP ratio | compile s |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in records:
+            print(fmt_row(r))
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Benchmark aggregator: one section per paper table/figure plus the
+roofline + kernel microbenches.  Prints ``name,key,value`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # smoke sizes
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale-ish
+
+The roofline section reads dryrun_results.json (+ rerun*.json); run
+``python -m repro.launch.dryrun --all --mesh both --out
+dryrun_results.json`` first if missing.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="closer-to-paper sizes (slower)")
+    ap.add_argument("--only", default=None,
+                    help="run a single section by name")
+    args = ap.parse_args(argv)
+
+    rounds = 400 if args.full else 120
+    nodes = 32 if args.full else 16
+    # Table I: the diversity-selection advantage grows with population
+    # size (paper: 50/100 nodes) — run it at 32 nodes even in smoke mode.
+    t1_nodes = 64 if args.full else 32
+    t1_rounds = 400 if args.full else 200
+
+    from . import (fig2_connectivity, fig3_curves, fig4_connectivity_levels,
+                   fig5_ablation, fig67_isolation, kernel_bench, roofline,
+                   table1_accuracy)
+
+    sections = [
+        ("fig2", lambda: fig2_connectivity.main(
+            ["--trials", "80" if args.full else "40"])),
+        ("fig67", lambda: fig67_isolation.main(
+            ["--rounds", "60" if args.full else "30"])),
+        ("table1", lambda: table1_accuracy.main(
+            ["--rounds", str(t1_rounds), "--nodes", str(t1_nodes)])),
+        ("fig3", lambda: fig3_curves.main(
+            ["--rounds", str(rounds), "--nodes", str(nodes)])),
+        ("fig4", lambda: fig4_connectivity_levels.main(
+            ["--rounds", str(max(rounds * 2 // 3, 60)),
+             "--nodes", str(nodes)]
+            + ([] if args.full else ["--ks", "3", "5"]))),
+        ("fig5", lambda: fig5_ablation.main(
+            ["--rounds", str(max(rounds // 2, 60)),
+             "--nodes", str(nodes)]
+            + ([] if args.full else ["--betas", "5", "500",
+                                     "--deltas", "1", "25"]))),
+        ("kernels", lambda: kernel_bench.main([])),
+        ("roofline", lambda: roofline.main(["--csv"])),
+    ]
+
+    failures = 0
+    for name, fn in sections:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"### section {name}", flush=True)
+        try:
+            fn()
+            print(f"section_time,{name},{time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"section_FAILED,{name}", flush=True)
+            traceback.print_exc()
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,46 @@
+"""The paper's experiment, end to end: four topology strategies on
+non-IID image classification (scaled Table I / Fig. 3).
+
+Morph here is the MESSAGE-FAITHFUL protocol simulator (partial views,
+gossiped similarity reports, request/accept negotiation) — the same
+decentralized control plane as the paper's implementation, driving a
+vmapped JAX training population.
+
+  PYTHONPATH=src python examples/paper_experiment.py [--rounds 150]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+from benchmarks.common import ExpConfig, run_experiment, summarize  # noqa
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=150)
+    ap.add_argument("--nodes", type=int, default=16)
+    ap.add_argument("--k", type=int, default=3)
+    args = ap.parse_args()
+
+    print(f"{args.nodes} nodes, k={args.k}, Dirichlet(0.1) non-IID\n")
+    results = {}
+    for name in ("static", "el-oracle", "morph", "fully-connected"):
+        cfg = ExpConfig(n_nodes=args.nodes, rounds=args.rounds, k=args.k)
+        s = summarize(run_experiment(name, cfg, progress=True))
+        results[name] = s
+        print(f"--> {name:16s} best_acc={s['best_acc']:.3f} "
+              f"inter-node var={s['internode_var']:.2f} "
+              f"comm={s['comm_bytes'] / 1e9:.2f} GB "
+              f"isolated/round={s['mean_isolated']:.2f}\n")
+
+    fc = results["fully-connected"]["best_acc"]
+    print("summary (paper claim: FC >= Morph > EL, Static; Morph within "
+          "~1pp of FC):")
+    for name, s in results.items():
+        print(f"  {name:16s} {s['best_acc']:.3f}  "
+              f"(gap to FC: {(fc - s['best_acc']) * 100:+.1f}pp)")
+
+
+if __name__ == "__main__":
+    main()

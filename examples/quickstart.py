@@ -1,0 +1,50 @@
+"""Quickstart: decentralized training with Morph in ~60 lines.
+
+Eight DL nodes, each with its own non-IID token stream, train a reduced
+llama-family model.  The whole Morph round — local step, Eq.-3 pairwise
+similarity, Eq.-5 diversity selection, college-admission matching,
+uniform mixing — runs as ONE jitted superstep.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import make_token_stream
+from repro.data.pipeline import TokenBatcher
+from repro.dlrt import MorphHParams, init_train_state, make_train_step
+from repro.optim import sgd
+
+N_NODES, BATCH, SEQ, ROUNDS, DELTA_R = 8, 8, 64, 60, 5
+
+cfg = get_config("llama3.2-3b").reduced()      # same family, smoke scale
+opt = sgd(0.1)
+state = init_train_state(jax.random.PRNGKey(0), cfg, opt, N_NODES)
+
+# Each node gets a different Markov "dialect" => non-IID local data.
+batchers = [TokenBatcher(make_token_stream(
+    60_000, cfg.vocab_size, seed=i, concentration=0.03 + 0.02 * (i % 4)),
+    BATCH, SEQ, seed=i) for i in range(N_NODES)]
+
+hp = MorphHParams(k=3, view_size=5, beta=500.0)   # paper defaults
+step_topo = jax.jit(make_train_step(cfg, opt, hp, do_topology=True))
+step_fixed = jax.jit(make_train_step(cfg, opt, hp, do_topology=False))
+
+for rnd in range(ROUNDS):
+    node_batches = [b.next() for b in batchers]
+    batch = {k: jnp.asarray(np.stack([nb[k] for nb in node_batches]))
+             for k in ("tokens", "labels")}
+    # Alg. 2: re-negotiate the topology every Delta_r rounds.
+    step = step_topo if rnd % DELTA_R == 0 else step_fixed
+    state, metrics = step(state, batch)
+    if rnd % 10 == 0 or rnd == ROUNDS - 1:
+        deg = np.asarray(state.morph.edges.sum(1))
+        known = int(state.morph.known.sum())
+        print(f"round {rnd:3d}  loss {float(metrics['loss']):.4f}  "
+              f"in-degree {deg.min()}..{deg.max()}  "
+              f"known-peer edges {known}")
+
+print("\nFinal in-edge matrix (row i <- senders):")
+print(np.asarray(state.morph.edges).astype(int))

@@ -1,0 +1,21 @@
+"""repro — a production-grade JAX framework reproducing and extending
+"Dynamic Topology Optimization for Non-IID Data in Decentralized Learning"
+(Morph; Cox, Ioannou, Decouchant, 2026).
+
+Subpackages
+-----------
+core        Morph itself + baselines (similarity, selection, matching,
+            protocol simulator, in-graph controller, mixing).
+models      Architecture zoo (dense/GQA, MoE, Mamba, RWKV-6, hybrid,
+            enc-dec, CNNs) with train forward + KV-cache decode.
+data        Non-IID partitioning + offline synthetic datasets + pipelines.
+optim       SGD/AdamW + schedules (pure pytree ops).
+checkpoint  msgpack+zstd pytree checkpoints.
+dlrt        Decentralized-learning runtime (round loop, metrics,
+            pjit/shard_map distribution).
+kernels     Pallas TPU kernels (pairwise cosine, graph mixing) + oracles.
+configs     Assigned architecture configs + paper CNNs.
+launch      Production mesh, multi-pod dry-run, training launcher.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Pytree checkpointing: msgpack + zstd, round-robin retention."""
+from .checkpoint import (CheckpointManager, load_pytree, save_pytree)
+
+__all__ = ["CheckpointManager", "load_pytree", "save_pytree"]

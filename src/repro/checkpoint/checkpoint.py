@@ -1,0 +1,115 @@
+"""msgpack + zstd pytree checkpoints with round-robin retention.
+
+Leaves are serialized as (dtype, shape, raw bytes); the treedef is
+reconstructed from the nested container structure itself (dicts / lists /
+tuples of leaves), so checkpoints are readable without the defining code.
+bfloat16 is stored via its uint16 bit pattern.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+_BF16 = "bfloat16"
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if str(arr.dtype) == _BF16:
+        raw = arr.view(np.uint16)
+        return {"__nd__": True, "dtype": _BF16, "shape": list(arr.shape),
+                "data": raw.tobytes()}
+    return {"__nd__": True, "dtype": str(arr.dtype),
+            "shape": list(arr.shape), "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict):
+    shape = tuple(d["shape"])
+    if d["dtype"] == _BF16:
+        raw = np.frombuffer(d["data"], np.uint16).reshape(shape)
+        return jnp.asarray(raw).view(jnp.bfloat16)
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(shape)
+
+
+def _encode(obj) -> Any:
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return {"__seq__": type(obj).__name__,
+                "items": [_encode(v) for v in obj]}
+    if isinstance(obj, (np.ndarray, jax.Array, np.generic)):
+        return _pack_leaf(obj)
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return {"__py__": obj}
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if "__nd__" in obj:
+            return _unpack_leaf(obj)
+        if "__seq__" in obj:
+            items = [_decode(v) for v in obj["items"]]
+            return tuple(items) if obj["__seq__"] == "tuple" else items
+        if "__py__" in obj:
+            return obj["__py__"]
+        return {k: _decode(v) for k, v in obj.items()}
+    return obj
+
+
+def save_pytree(path: str, tree, level: int = 3) -> None:
+    payload = msgpack.packb(_encode(jax.device_get(tree)))
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=level).compress(payload))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str):
+    with open(path, "rb") as f:
+        payload = zstandard.ZstdDecompressor().decompress(f.read())
+    return _decode(msgpack.unpackb(payload, strict_map_key=False))
+
+
+class CheckpointManager:
+    """step-indexed checkpoints with ``keep`` round-robin retention."""
+
+    _PAT = re.compile(r"ckpt_(\d+)\.msgpack\.zst$")
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.msgpack.zst")
+
+    def steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            m = self._PAT.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, step: int, tree) -> str:
+        path = self._path(step)
+        save_pytree(path, tree)
+        for old in self.steps()[:-self.keep]:
+            os.remove(self._path(old))
+        return path
+
+    def restore(self, step: Optional[int] = None):
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        step = steps[-1] if step is None else step
+        return step, load_pytree(self._path(step))

@@ -1,0 +1,28 @@
+"""The paper's own models: GN-LeNet CNNs for CIFAR-10 / FEMNIST
+(DecentralizePy defaults; Morph §IV-A2).
+
+These are not transformer :class:`ArchConfig`s — they feed the accuracy
+experiments (Table I, Figs. 3-7) through ``repro.models.cnn``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    in_channels: int
+    num_classes: int
+    image_size: int
+    width: int = 32
+
+
+CIFAR10_CNN = CNNConfig(name="cifar10-gn-lenet", in_channels=3,
+                        num_classes=10, image_size=32)
+FEMNIST_CNN = CNNConfig(name="femnist-gn-lenet", in_channels=1,
+                        num_classes=62, image_size=28)
+
+
+def get_cnn_config(dataset: str) -> CNNConfig:
+    return {"cifar10": CIFAR10_CNN, "femnist": FEMNIST_CNN}[dataset]

@@ -1,0 +1,42 @@
+"""Morph's core: dissimilarity-guided dynamic topology optimization.
+
+Public surface re-exported here; see DESIGN.md §3 for the module map.
+"""
+from .similarity import (model_similarity, pairwise_model_similarity,
+                         layer_cosine, SimilarityHistory, SimilarityReport,
+                         angular_bound, similarity_matrix_numpy)
+from .selection import (sample_sequential, sample_gumbel_topk,
+                        update_wanted_senders, update_wanted_senders_host,
+                        random_injection, softmax_logits)
+from .matching import deferred_acceptance, match_jax
+from .topology import (random_regular_graph, random_out_regular,
+                       fully_connected, is_connected, isolated_nodes,
+                       in_degrees, out_degrees, comm_cost,
+                       connectivity_probability, TopologyState)
+from .mixing import (uniform_weights, metropolis_hastings_weights,
+                     fully_connected_weights, uniform_weights_jax,
+                     apply_mixing, mix_numpy, is_row_stochastic,
+                     is_doubly_stochastic)
+from .baselines import (TopologyStrategy, StaticStrategy,
+                        FullyConnectedStrategy, EpidemicStrategy)
+from .protocol import MorphConfig, MorphProtocol, MorphNodeState
+from .morph import MorphGraphState, init_state, update_topology, mix_round
+
+__all__ = [
+    "model_similarity", "pairwise_model_similarity", "layer_cosine",
+    "SimilarityHistory", "SimilarityReport", "angular_bound",
+    "similarity_matrix_numpy",
+    "sample_sequential", "sample_gumbel_topk", "update_wanted_senders",
+    "update_wanted_senders_host", "random_injection", "softmax_logits",
+    "deferred_acceptance", "match_jax",
+    "random_regular_graph", "random_out_regular", "fully_connected",
+    "is_connected", "isolated_nodes", "in_degrees", "out_degrees",
+    "comm_cost", "connectivity_probability", "TopologyState",
+    "uniform_weights", "metropolis_hastings_weights",
+    "fully_connected_weights", "uniform_weights_jax", "apply_mixing",
+    "mix_numpy", "is_row_stochastic", "is_doubly_stochastic",
+    "TopologyStrategy", "StaticStrategy", "FullyConnectedStrategy",
+    "EpidemicStrategy",
+    "MorphConfig", "MorphProtocol", "MorphNodeState",
+    "MorphGraphState", "init_state", "update_topology", "mix_round",
+]

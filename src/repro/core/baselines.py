@@ -1,0 +1,84 @@
+"""Baseline topology strategies the paper compares Morph against (§IV-A3).
+
+Every strategy implements the tiny :class:`TopologyStrategy` protocol:
+given the round index (and, for Morph, the current models) it produces the
+round's in-edge matrix and mixing matrix.  The runtime is strategy-agnostic.
+
+* :class:`StaticStrategy` — fixed random d-regular undirected graph with
+  Metropolis-Hastings averaging.
+* :class:`FullyConnectedStrategy` — the optimistic upper bound.
+* :class:`EpidemicStrategy` — Epidemic Learning (De Vos et al., NeurIPS'23):
+  a fresh random k-out topology every round.  ``oracle=True`` is EL-Oracle
+  (global peer knowledge); ``oracle=False`` is EL-Local (each node samples
+  from its partial view only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Protocol, Tuple
+
+import numpy as np
+
+from . import mixing, topology
+
+
+class TopologyStrategy(Protocol):
+    name: str
+
+    def round_edges(self, rnd: int, stacked_params=None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns ``(edges, W)`` for this round (in-edge convention)."""
+        ...
+
+
+@dataclass
+class StaticStrategy:
+    """Fixed d-regular undirected graph + MH weights (paper's 'Static')."""
+    n: int
+    degree: int
+    seed: int = 0
+    name: str = "static-mh"
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self._adj = topology.random_regular_graph(self.n, self.degree, rng)
+        self._w = mixing.metropolis_hastings_weights(self._adj)
+        self._edges = self._adj.copy()   # symmetric: send both ways
+
+    def round_edges(self, rnd: int, stacked_params=None):
+        return self._edges, self._w
+
+
+@dataclass
+class FullyConnectedStrategy:
+    n: int
+    name: str = "fully-connected"
+
+    def __post_init__(self):
+        self._edges = topology.fully_connected(self.n)
+        self._w = mixing.fully_connected_weights(self.n)
+
+    def round_edges(self, rnd: int, stacked_params=None):
+        return self._edges, self._w
+
+
+@dataclass
+class EpidemicStrategy:
+    """Epidemic Learning: fresh random k-out edges every round."""
+    n: int
+    k: int
+    seed: int = 0
+    oracle: bool = True            # EL-Oracle vs EL-Local
+    view: Optional[np.ndarray] = None   # [n, n] known-peer mask (EL-Local)
+    name: str = "epidemic"
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self.name = "el-oracle" if self.oracle else "el-local"
+        if not self.oracle and self.view is None:
+            raise ValueError("EL-Local needs an initial partial view")
+
+    def round_edges(self, rnd: int, stacked_params=None):
+        view = None if self.oracle else self.view
+        edges = topology.random_out_regular(self.n, self.k, self._rng, view)
+        return edges, mixing.uniform_weights(edges)

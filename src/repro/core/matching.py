@@ -1,0 +1,150 @@
+"""In/out-degree negotiation (paper §III-B).
+
+Morph keeps every node's **in-degree** fixed at ``k`` (it pulls models from
+exactly ``k`` senders) and caps every node's **out-degree** at ``k``.  The
+negotiation is the college-admission (hospital/residents) deferred
+acceptance scheme:
+
+* a receiver issues connection requests to its wanted senders;
+* a contacted sender accepts while it has < ``k_out`` outgoing connections,
+  otherwise it accepts iff the new request is *more dissimilar* than the
+  least dissimilar request it currently serves (evicting that one);
+* evicted/rejected receivers move down their preference list.
+
+The paper notes this terminates in at most ``ceil((n-1)/k)`` steps; we use
+that as the iteration bound in both implementations.
+
+Two implementations:
+
+* :func:`deferred_acceptance` — host-side, the message-faithful version
+  used by ``core.protocol`` (explicit proposals, evictions, waitlists);
+* :func:`match_jax` — mask/top-k formulation with a bounded
+  ``lax.fori_loop`` for the in-graph controller (n is small, O(n^2) masks).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Host-side deferred acceptance.
+# ---------------------------------------------------------------------------
+
+def deferred_acceptance(prefs: Sequence[Sequence[int]],
+                        sender_scores: np.ndarray,
+                        k_in: int,
+                        k_out: int) -> np.ndarray:
+    """Many-to-many deferred acceptance.
+
+    ``prefs[i]``            -- receiver i's candidate senders, best first.
+    ``sender_scores[j, i]`` -- how much sender j prefers serving receiver i
+                               (Morph: the *dissimilarity* between their
+                               models; higher = kept in preference).
+    Returns the boolean in-edge matrix ``E`` with ``E[i, j] = True`` iff
+    sender ``j`` ends up sending its model to receiver ``i``.
+
+    Invariants (checked by tests): in-degree(i) <= k_in, out-degree(j) <=
+    k_out, and the matching is stable w.r.t. the given preferences.
+    """
+    n = sender_scores.shape[0]
+    next_choice = [0] * n                      # cursor into prefs[i]
+    held: Dict[int, List[int]] = {j: [] for j in range(n)}  # sender -> rcvrs
+    accepted = [0] * n                         # receiver in-degree so far
+    bound = max(1, math.ceil((n - 1) / max(k_in, 1))) + k_in + 1
+
+    for _ in range(bound * max(k_in, 1)):
+        progressed = False
+        for i in range(n):
+            while accepted[i] < k_in and next_choice[i] < len(prefs[i]):
+                j = prefs[i][next_choice[i]]
+                next_choice[i] += 1
+                if j == i:
+                    continue
+                progressed = True
+                slot = held[j]
+                if len(slot) < k_out:
+                    slot.append(i)
+                    accepted[i] += 1
+                else:
+                    worst = min(slot, key=lambda r: sender_scores[j, r])
+                    if sender_scores[j, i] > sender_scores[j, worst]:
+                        slot.remove(worst)
+                        accepted[worst] -= 1
+                        slot.append(i)
+                        accepted[i] += 1
+                # else: rejected, i moves on (loop continues)
+        if not progressed:
+            break
+
+    edges = np.zeros((n, n), bool)
+    for j, rcvrs in held.items():
+        for i in rcvrs:
+            edges[i, j] = True
+    return edges
+
+
+# ---------------------------------------------------------------------------
+# In-graph (jit-safe) matching.
+# ---------------------------------------------------------------------------
+
+def _masked_rank(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    """Rank (0 = best) of each masked entry among masked entries, rows."""
+    masked = jnp.where(mask, scores, NEG_INF)
+    order = jnp.argsort(-masked, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    return jnp.where(mask, ranks, scores.shape[-1])
+
+
+def match_jax(recv_scores: jax.Array,
+              send_scores: jax.Array,
+              candidate_mask: jax.Array,
+              k_in: int,
+              k_out: int,
+              rounds: int | None = None) -> jax.Array:
+    """Bounded deferred acceptance on dense masks (jit/vmap-safe).
+
+    ``recv_scores[i, j]`` -- receiver i's preference for sender j
+                             (higher = proposed to earlier).
+    ``send_scores[j, i]`` -- sender j's preference for receiver i.
+    ``candidate_mask[i, j]`` -- receiver i may contact sender j at all.
+
+    Returns boolean in-edge matrix ``E[i, j]``; in-degree <= k_in and
+    out-degree <= k_out by construction.
+    """
+    n = recv_scores.shape[0]
+    if rounds is None:
+        # the paper's ceil((n-1)/k) bound describes the *message* rounds;
+        # the dense parallel formulation can need up to n propose/keep
+        # sweeps to quiesce (each sweep settles >= 1 edge) — still O(n^3)
+        # bool work total, negligible at DL population sizes.
+        rounds = n
+    eye = jnp.eye(n, dtype=bool)
+    cand = candidate_mask & ~eye
+
+    def body(_, state):
+        accepted, rejected = state
+        # --- receivers propose to their top (k_in - held) fresh candidates.
+        avail = cand & ~accepted & ~rejected
+        need = k_in - accepted.sum(axis=1, keepdims=True)
+        rank = _masked_rank(recv_scores, avail)
+        proposals = avail & (rank < need)
+        # --- senders keep their top-k_out among held + proposals.
+        pool = accepted | proposals                    # [recv, send]
+        pool_t = pool.T                                # [send, recv]
+        send_rank = _masked_rank(send_scores, pool_t)  # rank over receivers
+        keep_t = pool_t & (send_rank < k_out)
+        new_accepted = keep_t.T
+        new_rejected = rejected | (pool & ~new_accepted)
+        return new_accepted, new_rejected
+
+    accepted0 = jnp.zeros((n, n), bool)
+    rejected0 = jnp.zeros((n, n), bool)
+    accepted, _ = jax.lax.fori_loop(0, rounds, body, (accepted0, rejected0))
+    return accepted

@@ -1,0 +1,119 @@
+"""Mixing matrices and their application to node-stacked parameter pytrees.
+
+The model-exchange step of every protocol in this repo reduces to one
+row-stochastic matrix ``W_t`` applied along the node axis:
+
+    x_i <- sum_j W[i, j] * x_j
+
+* Morph / Epidemic Learning use **uniform averaging** over self + received
+  models (Alg. 2 line 12):  ``W[i, j] = 1 / (|S_t^i| + 1)``.
+* The Static baseline uses **Metropolis-Hastings** weights on its fixed
+  undirected graph, the classical choice that makes W symmetric and doubly
+  stochastic, removing topological bias.
+* Fully connected uses ``W = 1/n``.
+
+``apply_mixing`` is the JAX path (einsum over the node axis — lowered by
+XLA to all-gather/reduce-scatter when the node axis is sharded); the Pallas
+kernel ``repro.kernels.graph_mix`` implements the same contraction with
+explicit VMEM blocking for the flattened-parameter hot path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# W builders (host-side, numpy — graphs are tiny).
+# ---------------------------------------------------------------------------
+
+def uniform_weights(edges: np.ndarray) -> np.ndarray:
+    """Alg. 2 l.12: average own + received models uniformly.
+
+    ``edges[i, j]`` = j sends to i.  Rows are stochastic by construction;
+    isolated nodes (no in-edges) keep their own model (W[i,i] = 1).
+    """
+    n = edges.shape[0]
+    w = edges.astype(np.float64) + np.eye(n)
+    return w / w.sum(axis=1, keepdims=True)
+
+
+def metropolis_hastings_weights(adj: np.ndarray) -> np.ndarray:
+    """MH weights on an undirected graph: W[i,j] = 1/(1+max(d_i,d_j)),
+    diagonal soaks up the remainder.  Symmetric & doubly stochastic."""
+    adj = np.asarray(adj, bool)
+    if not (adj == adj.T).all():
+        raise ValueError("Metropolis-Hastings weights need an undirected "
+                         "(symmetric) adjacency matrix")
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    w = np.zeros((n, n), np.float64)
+    ii, jj = np.nonzero(adj)
+    w[ii, jj] = 1.0 / (1.0 + np.maximum(deg[ii], deg[jj]))
+    np.fill_diagonal(w, 0.0)
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def fully_connected_weights(n: int) -> np.ndarray:
+    return np.full((n, n), 1.0 / n)
+
+
+def uniform_weights_jax(edges: jax.Array) -> jax.Array:
+    """jit-safe twin of :func:`uniform_weights` for the in-graph controller."""
+    n = edges.shape[0]
+    w = edges.astype(jnp.float32) + jnp.eye(n, dtype=jnp.float32)
+    return w / w.sum(axis=1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Application to stacked pytrees.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("precision",))
+def apply_mixing(w: jax.Array, stacked_params,
+                 precision: str = "highest"):
+    """``x_i <- sum_j W[i,j] x_j`` for every leaf of a node-stacked pytree.
+
+    Leaves have shape ``[n, ...]``.  The contraction runs in f32 and casts
+    back to the leaf dtype, so bf16-stored models do not lose the averaging
+    precision (matters once n is large).
+    """
+    prec = jax.lax.Precision(precision.lower()) \
+        if isinstance(precision, str) else precision
+
+    def mix_leaf(leaf):
+        # tensordot over the node axis only — no reshape, so sharded
+        # trailing dims stay sharded (the contraction lowers to the
+        # node-axis collective schedule the roofline measures).
+        mixed = jnp.tensordot(w.astype(jnp.float32),
+                              leaf.astype(jnp.float32),
+                              axes=((1,), (0,)), precision=prec)
+        return mixed.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(mix_leaf, stacked_params)
+
+
+def mix_numpy(w: np.ndarray, stacked: dict) -> dict:
+    """Host-side mixing for the protocol simulator / tiny experiments."""
+    out = {}
+    for k, v in stacked.items():
+        n = v.shape[0]
+        out[k] = (w @ v.reshape(n, -1)).reshape(v.shape).astype(v.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sanity predicates used by tests and the runtime's debug mode.
+# ---------------------------------------------------------------------------
+
+def is_row_stochastic(w: np.ndarray, atol: float = 1e-9) -> bool:
+    return bool(np.all(w >= -atol) and
+                np.allclose(w.sum(axis=1), 1.0, atol=atol))
+
+def is_doubly_stochastic(w: np.ndarray, atol: float = 1e-9) -> bool:
+    return is_row_stochastic(w, atol) and is_row_stochastic(w.T, atol)

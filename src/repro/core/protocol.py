@@ -1,0 +1,187 @@
+"""Message-faithful Morph protocol simulator (paper Algorithms 2 & 3, §III).
+
+This is the *paper-faithful* control plane: every node keeps only its own
+partial view of the network and negotiates connections through explicit
+request/accept/reject messages.  No global knowledge is used anywhere in a
+node's decision — the global similarity matrix computed internally is only
+an oracle that answers "what would node i measure if it held node j's
+model", exactly the measurements the real protocol grants.
+
+Per round (Alg. 2):
+  1. every ``delta_r`` rounds each node recomputes its wanted senders
+     (Alg. 3: softmax-without-replacement over dissimilarity + random
+     injection) and the network runs the college-admission negotiation;
+  2. models flow along the agreed edges; each receiver measures its direct
+     similarity with each sender (Eq. 3), merges the sender's peer list
+     (gossip discovery) and stores the sender's similarity reports for
+     transitive estimation (Eq. 4);
+  3. every node averages its own + received models uniformly (the runtime
+     applies the returned W).
+
+The simulator also tallies protocol overhead (control messages) so the
+communication-cost metric covers negotiation, not just model transfers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from . import mixing, topology
+from .matching import deferred_acceptance
+from .selection import update_wanted_senders_host
+from .similarity import SimilarityHistory, SimilarityReport, \
+    similarity_matrix_numpy
+
+
+@dataclass
+class MorphConfig:
+    n: int
+    k: int                      # in-degree target == out-degree cap
+    view_size: Optional[int] = None   # s; defaults to k + 2 random edges
+    beta: float = 500.0         # softmax sharpness (paper default)
+    delta_r: int = 5            # topology refresh cadence (paper default)
+    history_depth: int = 5      # |H_z|
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.view_size is None:
+            # Fig. 2: d_r = 2 random edges suffice to stay connected.
+            self.view_size = self.k + 2
+        if not (0 < self.k < self.n):
+            raise ValueError("need 0 < k < n")
+        if self.view_size < self.k:
+            raise ValueError("view_size must be >= k")
+
+
+@dataclass
+class MorphNodeState:
+    """Everything node i is allowed to know."""
+    nid: int
+    known_peers: Set[int] = field(default_factory=set)     # P_i
+    history: SimilarityHistory = field(default_factory=SimilarityHistory)
+    wanted: Set[int] = field(default_factory=set)          # current w_s
+
+
+class MorphProtocol:
+    """Drop-in :class:`~repro.core.baselines.TopologyStrategy` that runs
+    the full decentralized negotiation."""
+
+    name = "morph"
+
+    def __init__(self, cfg: MorphConfig,
+                 initial_adj: Optional[np.ndarray] = None):
+        self.cfg = cfg
+        self._rng = np.random.default_rng(cfg.seed)
+        n = cfg.n
+        if initial_adj is None:
+            deg = min(max(cfg.k, 2), n - 1)
+            if (n * deg) % 2:
+                deg += 1
+            initial_adj = topology.random_regular_graph(n, deg, self._rng)
+        self.nodes: List[MorphNodeState] = []
+        for i in range(n):
+            st = MorphNodeState(nid=i)
+            st.history = SimilarityHistory(depth=cfg.history_depth)
+            st.known_peers = set(np.flatnonzero(initial_adj[i])) - {i}
+            st.wanted = set(list(st.known_peers)[:cfg.k])
+            self.nodes.append(st)
+        self._edges: Optional[np.ndarray] = None
+        self.control_messages = 0          # negotiation overhead tally
+        self.similarity_floats = 0         # gossiped similarity payload
+
+    # -- helpers ----------------------------------------------------------
+
+    def _estimates(self, st: MorphNodeState) -> Tuple[np.ndarray, np.ndarray,
+                                                      np.ndarray]:
+        """(sim estimates, C_A mask, C mask) for one node."""
+        n = self.cfg.n
+        sims = np.zeros(n)
+        ca = np.zeros(n, bool)
+        c = np.zeros(n, bool)
+        for p in st.known_peers:
+            if p == st.nid:
+                continue
+            c[p] = True
+            est = st.history.estimate(p)
+            if est is not None:
+                sims[p] = est
+                ca[p] = True
+        return sims, ca, c
+
+    def _negotiate(self) -> np.ndarray:
+        """Alg. 3 per node + college-admission matching across nodes."""
+        cfg = self.cfg
+        n = cfg.n
+        prefs: List[List[int]] = []
+        est_dissim = np.zeros((n, n))
+        for st in self.nodes:
+            sims, ca, c = self._estimates(st)
+            view = update_wanted_senders_host(
+                self._rng, sims, ca, c, cfg.k, cfg.view_size, cfg.beta)
+            st.wanted = set(np.flatnonzero(view))
+            # Preference order: estimated dissimilarity, random tiebreak.
+            wanted = list(st.wanted)
+            keys = [(1.0 - sims[j]) if ca[j] else self._rng.uniform(0.5, 1.5)
+                    for j in wanted]
+            order = sorted(range(len(wanted)), key=lambda t: -keys[t])
+            pref = [wanted[t] for t in order]
+            # Rejected receivers "look for another connection to maintain
+            # k" (§III-B): fall back to remaining known peers, shuffled,
+            # behind the diversity-ranked view.
+            rest = [j for j in np.flatnonzero(c) if j not in st.wanted]
+            self._rng.shuffle(rest)
+            pref.extend(rest)
+            prefs.append(pref)
+            for j, kj in zip(wanted, keys):
+                est_dissim[st.nid, j] = kj
+            for j in rest:
+                est_dissim[st.nid, j] = self._rng.uniform(0.0, 0.3)
+            self.control_messages += len(wanted)       # connection requests
+        # Fig. 1: a requester shares its dissimilarity value with the
+        # sender, so the sender ranks requesters by the *reported* value.
+        sender_scores = est_dissim.T.copy()
+        edges = deferred_acceptance(prefs, sender_scores, cfg.k, cfg.k)
+        self.control_messages += int(edges.sum())       # accept messages
+        return edges
+
+    def _exchange_side_effects(self, edges: np.ndarray,
+                               true_sims: Optional[np.ndarray],
+                               rnd: int) -> None:
+        """Direct measurements + gossip discovery + similarity reports."""
+        for st in self.nodes:
+            i = st.nid
+            senders = np.flatnonzero(edges[i])
+            for j in senders:
+                sender = self.nodes[j]
+                # receiver i now holds j's model: direct Eq. 3 measurement.
+                if true_sims is not None:
+                    st.history.observe_direct(j, float(true_sims[i, j]))
+                # gossip: merge j's peer list (plus j itself).
+                st.known_peers |= sender.known_peers | {j}
+                st.known_peers.discard(i)
+                # j piggybacks its direct similarity reports (Eq. 4 feed).
+                for y, sigma in sender.history.direct.items():
+                    if y != i:
+                        st.history.observe_report(
+                            SimilarityReport(t=rnd, reporter=j, target=y,
+                                             sigma=sigma))
+                        self.similarity_floats += 1
+
+    # -- strategy API ------------------------------------------------------
+
+    def round_edges(self, rnd: int, stacked_params=None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        cfg = self.cfg
+        if self._edges is None or rnd % cfg.delta_r == 0:
+            self._edges = self._negotiate()
+        true_sims = (similarity_matrix_numpy(stacked_params)
+                     if stacked_params is not None else None)
+        self._exchange_side_effects(self._edges, true_sims, rnd)
+        return self._edges, mixing.uniform_weights(self._edges)
+
+    # -- introspection ------------------------------------------------------
+
+    def view_sizes(self) -> np.ndarray:
+        return np.array([len(st.known_peers) for st in self.nodes])

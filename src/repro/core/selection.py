@@ -1,0 +1,156 @@
+"""Diversity-driven neighbor selection (paper Eq. 5 and Algorithm 3).
+
+Morph grows a candidate set ``C_b`` of ``k`` preferred senders by
+*sequentially* sampling without replacement from
+
+    p_j = exp(-beta * sim(w, w_j)) / sum_{i in C_A \\ C_b} exp(-beta * sim(w, w_i))
+
+then augments it with ``s - k`` uniformly random peers ``R`` drawn from the
+rest of the known network (Alg. 3), so the final view is ``V = C_b ∪ R``.
+
+Sequential softmax sampling without replacement is *exactly* the Gumbel
+top-k trick: add i.i.d. Gumbel(0,1) noise to the logits ``-beta * sim`` and
+take the top-k (Vieira 2014; Kool et al. 2019).  We implement both:
+
+* :func:`sample_sequential` — literal Alg. 3 loop (host + jnp variants),
+  the paper-faithful reference;
+* :func:`sample_gumbel_topk` — the TPU-native equivalent used inside the
+  jitted controller (no data-dependent loop, one ``top_k``).
+
+A property test (tests/test_selection.py) checks the two produce the same
+inclusion distribution.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def softmax_logits(sim: jax.Array, beta: float) -> jax.Array:
+    """Selection logits: most-dissimilar peers get the largest logit."""
+    return -beta * sim
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful sequential sampler (Alg. 3 lines 1-2).
+# ---------------------------------------------------------------------------
+
+def sample_sequential(rng: np.random.Generator,
+                      sim: np.ndarray,
+                      candidate_mask: np.ndarray,
+                      k: int,
+                      beta: float) -> np.ndarray:
+    """Sequentially sample ``k`` indices without replacement from the
+    softmax over ``-beta * sim`` restricted to ``candidate_mask``.
+
+    Host-side (numpy) — used by the protocol simulator and as the oracle in
+    tests.  Returns the selected indices (possibly fewer than ``k`` when the
+    candidate set is small).
+    """
+    sim = np.asarray(sim, np.float64)
+    avail = np.asarray(candidate_mask, bool).copy()
+    chosen = []
+    for _ in range(min(k, int(avail.sum()))):
+        logits = np.where(avail, -beta * sim, -np.inf)
+        logits = logits - logits.max()
+        probs = np.exp(logits)
+        probs = probs / probs.sum()
+        j = int(rng.choice(len(sim), p=probs))
+        chosen.append(j)
+        avail[j] = False
+    return np.asarray(chosen, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Gumbel-top-k equivalent (TPU-native, jit-safe).
+# ---------------------------------------------------------------------------
+
+def sample_gumbel_topk(key: jax.Array,
+                       sim: jax.Array,
+                       candidate_mask: jax.Array,
+                       k: int,
+                       beta: float) -> Tuple[jax.Array, jax.Array]:
+    """Equivalent of :func:`sample_sequential` without a sequential loop.
+
+    Returns ``(indices[k], valid[k])``; ``valid`` marks entries drawn from
+    a real candidate (the candidate set may hold fewer than ``k`` peers).
+    """
+    k = min(k, sim.shape[-1])
+    logits = softmax_logits(sim, beta)
+    gumbel = jax.random.gumbel(key, sim.shape, jnp.float32)
+    scores = jnp.where(candidate_mask, logits + gumbel, NEG_INF)
+    _, idx = jax.lax.top_k(scores, k)
+    # An index is valid iff its underlying candidate slot was available.
+    valid = jnp.take(candidate_mask, idx)
+    # top_k of k > |C_A| repeats NEG_INF slots; rank-based validity:
+    valid = valid & (jnp.arange(k) < candidate_mask.sum())
+    return idx, valid
+
+
+def random_injection(key: jax.Array,
+                     pool_mask: jax.Array,
+                     count: int) -> Tuple[jax.Array, jax.Array]:
+    """Alg. 3 line 3: uniform random sample R of size ``count`` from the
+    peers in ``pool_mask`` (C \\ C_A).  Uniform sampling without replacement
+    is Gumbel-top-k with constant logits."""
+    count = min(count, pool_mask.shape[-1])
+    gumbel = jax.random.gumbel(key, pool_mask.shape, jnp.float32)
+    scores = jnp.where(pool_mask, gumbel, NEG_INF)
+    _, idx = jax.lax.top_k(scores, count)
+    valid = jnp.take(pool_mask, idx) & (jnp.arange(count) < pool_mask.sum())
+    return idx, valid
+
+
+def update_wanted_senders(key: jax.Array,
+                          sim: jax.Array,
+                          local_candidates: jax.Array,
+                          full_candidates: jax.Array,
+                          k: int,
+                          view_size: int,
+                          beta: float) -> jax.Array:
+    """Algorithm 3, jit-safe: returns a boolean view mask ``V`` of up to
+    ``view_size`` wanted senders = ``k`` diversity-sampled ∪ ``s-k`` random.
+
+    ``sim``              -- [n] similarity estimates (own slot ignored).
+    ``local_candidates`` -- C_A: peers with a usable similarity estimate.
+    ``full_candidates``  -- C: every known peer (superset of C_A).
+    """
+    n = sim.shape[0]
+    kb, kr = jax.random.split(key)
+    bidx, bvalid = sample_gumbel_topk(kb, sim, local_candidates, k, beta)
+    view = jnp.zeros((n,), bool)
+    view = view.at[bidx].set(bvalid, mode="drop")
+    pool = full_candidates & ~local_candidates & ~view
+    r = min(max(view_size - k, 0), n)
+    if r > 0:
+        ridx, rvalid = random_injection(kr, pool, r)
+        view = view.at[ridx].max(rvalid, mode="drop")
+    return view
+
+
+# ---------------------------------------------------------------------------
+# Host-side twin used by the protocol simulator.
+# ---------------------------------------------------------------------------
+
+def update_wanted_senders_host(rng: np.random.Generator,
+                               sim: np.ndarray,
+                               local_candidates: np.ndarray,
+                               full_candidates: np.ndarray,
+                               k: int,
+                               view_size: int,
+                               beta: float) -> np.ndarray:
+    """Numpy implementation of Alg. 3 used by ``core.protocol``."""
+    n = len(sim)
+    chosen = sample_sequential(rng, sim, local_candidates, k, beta)
+    view = np.zeros(n, bool)
+    view[chosen] = True
+    pool = np.flatnonzero(full_candidates & ~local_candidates & ~view)
+    r = min(max(view_size - k, 0), len(pool))
+    if r > 0:
+        view[rng.choice(pool, size=r, replace=False)] = True
+    return view

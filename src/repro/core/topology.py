@@ -1,0 +1,160 @@
+"""Communication-graph state and graph-theoretic metrics.
+
+Edge convention throughout the repo: ``edges[i, j] = True`` means node ``j``
+sends its model to node ``i`` — i.e. row ``i`` lists node i's **in-edges**
+(Alg. 2's ``S_t`` senders).  In-degree = row sum, out-degree = column sum.
+
+Everything here is host-side numpy: graphs are tiny (n <= a few thousand)
+and the metrics (connectivity, isolation, comm volume) feed the paper's
+Figures 2, 6 and 7.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Generators.
+# ---------------------------------------------------------------------------
+
+def random_regular_graph(n: int, degree: int,
+                         rng: np.random.Generator,
+                         max_tries: int = 200) -> np.ndarray:
+    """Undirected ``degree``-regular random graph (paper's initial 3/7-
+    regular topologies).
+
+    Uses networkx's pairing-with-repair sampler (the plain configuration
+    model with whole-graph rejection fails for d >= 7 at n = 100).
+    Returns a symmetric boolean adjacency matrix without self-loops.
+    """
+    if n * degree % 2 != 0:
+        raise ValueError("n * degree must be even for a regular graph")
+    if degree >= n:
+        raise ValueError("degree must be < n")
+    import networkx as nx
+    g = nx.random_regular_graph(degree, n,
+                                seed=int(rng.integers(2**31 - 1)))
+    adj = np.zeros((n, n), bool)
+    for a, b in g.edges:
+        adj[a, b] = adj[b, a] = True
+    return adj
+
+
+def random_out_regular(n: int, k: int, rng: np.random.Generator,
+                       view: Optional[np.ndarray] = None) -> np.ndarray:
+    """Each node picks ``k`` distinct recipients uniformly (Epidemic
+    Learning's per-round topology).  ``view[j]`` optionally restricts node
+    j's choices to its known peers (EL-Local).  Returns in-edge matrix."""
+    edges = np.zeros((n, n), bool)
+    for j in range(n):
+        if view is not None:
+            pool = np.flatnonzero(view[j])
+            pool = pool[pool != j]
+        else:
+            pool = np.delete(np.arange(n), j)
+        kk = min(k, len(pool))
+        if kk > 0:
+            rcvrs = rng.choice(pool, size=kk, replace=False)
+            edges[rcvrs, j] = True
+    return edges
+
+
+def fully_connected(n: int) -> np.ndarray:
+    return ~np.eye(n, dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# Metrics.
+# ---------------------------------------------------------------------------
+
+def is_connected(edges: np.ndarray) -> bool:
+    """Connectivity *in the undirected sense* (paper §II-A)."""
+    n = edges.shape[0]
+    und = edges | edges.T
+    seen = np.zeros(n, bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        u = stack.pop()
+        for v in np.flatnonzero(und[u]):
+            if not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    return bool(seen.all())
+
+
+def isolated_nodes(edges: np.ndarray) -> np.ndarray:
+    """Nodes with **no incoming connection** — they cannot update their
+    model this round (paper Figs. 6/7)."""
+    return np.flatnonzero(edges.sum(axis=1) == 0)
+
+
+def in_degrees(edges: np.ndarray) -> np.ndarray:
+    return edges.sum(axis=1)
+
+
+def out_degrees(edges: np.ndarray) -> np.ndarray:
+    return edges.sum(axis=0)
+
+
+def comm_cost(edges: np.ndarray, model_bytes: int) -> int:
+    """Total bytes moved this round = (#directed model transfers) * size."""
+    return int(edges.sum()) * model_bytes
+
+
+def connectivity_probability(n: int, d_s: int, d_r: int,
+                             trials: int, seed: int = 0) -> float:
+    """Paper Fig. 2: probability that a graph whose nodes each pick ``d_s``
+    similarity-driven in-edges (adversarially clustered — worst case: the
+    similarity edges form cliques) plus ``d_r`` uniformly random in-edges
+    stays connected.
+
+    The worst case for similarity edges is maximal clustering, so we model
+    them as disjoint cliques of size ``d_s + 1`` — random edges alone must
+    bridge the cliques, matching the paper's pessimistic simulation.
+    """
+    rng = np.random.default_rng(seed)
+    ok = 0
+    for _ in range(trials):
+        edges = np.zeros((n, n), bool)
+        if d_s > 0:
+            # adversarial similarity clusters: disjoint cliques
+            perm = rng.permutation(n)
+            size = d_s + 1
+            for start in range(0, n, size):
+                blk = perm[start:start + size]
+                for a in blk:
+                    for b in blk:
+                        if a != b:
+                            edges[a, b] = True
+        if d_r > 0:
+            edges |= random_out_regular(n, d_r, rng)
+        ok += is_connected(edges)
+    return ok / trials
+
+
+# ---------------------------------------------------------------------------
+# Mutable topology state for the runtime.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TopologyState:
+    """Book-keeping shared by strategies and the metrics logger."""
+    n: int
+    edges: np.ndarray                 # current in-edge matrix
+    round: int = 0
+    total_transfers: int = 0          # cumulative directed model sends
+    isolation_history: List[int] = field(default_factory=list)
+
+    @classmethod
+    def empty(cls, n: int) -> "TopologyState":
+        return cls(n=n, edges=np.zeros((n, n), bool))
+
+    def advance(self, edges: np.ndarray) -> None:
+        self.edges = edges
+        self.round += 1
+        self.total_transfers += int(edges.sum())
+        self.isolation_history.append(len(isolated_nodes(edges)))

@@ -1,0 +1,76 @@
+"""Per-node batching pipelines.
+
+Each DL node owns one shard (its partition indices) and draws batches
+from it with an independent, seeded RNG — matching the paper's "sample a
+data point from the local distribution" step while staying reproducible.
+
+:class:`StackedBatcher` draws one batch per node and stacks them on a
+leading node axis, which is the layout the vmapped/sharded runtime
+consumes (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .synthetic import ImageDataset
+
+
+class NodeBatcher:
+    """Infinite shuffled batches from one node's shard."""
+
+    def __init__(self, ds: ImageDataset, indices: np.ndarray,
+                 batch_size: int, seed: int):
+        if len(indices) == 0:
+            raise ValueError("empty shard")
+        self.ds = ds
+        self.indices = np.asarray(indices)
+        self.batch = batch_size
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(len(self.indices))
+        self._pos = 0
+
+    def next(self) -> Dict[str, np.ndarray]:
+        take: List[int] = []
+        while len(take) < self.batch:
+            if self._pos >= len(self._order):
+                self._order = self.rng.permutation(len(self.indices))
+                self._pos = 0
+            take.append(self.indices[self._order[self._pos]])
+            self._pos += 1
+        sel = np.asarray(take)
+        return {"images": self.ds.images[sel], "labels": self.ds.labels[sel]}
+
+
+class StackedBatcher:
+    """One batch per node, stacked on a leading node axis."""
+
+    def __init__(self, ds: ImageDataset, parts: Sequence[np.ndarray],
+                 batch_size: int, seed: int = 0):
+        self.nodes = [NodeBatcher(ds, p, batch_size, seed + 7919 * i)
+                      for i, p in enumerate(parts)]
+
+    def next(self) -> Dict[str, np.ndarray]:
+        batches = [n.next() for n in self.nodes]
+        return {k: np.stack([b[k] for b in batches])
+                for k in batches[0]}
+
+
+class TokenBatcher:
+    """Next-token LM batches from a per-node token stream."""
+
+    def __init__(self, tokens: np.ndarray, batch_size: int, seq_len: int,
+                 seed: int):
+        self.tokens = tokens
+        self.batch = batch_size
+        self.seq = seq_len
+        self.rng = np.random.default_rng(seed)
+
+    def next(self) -> Dict[str, np.ndarray]:
+        starts = self.rng.integers(0, len(self.tokens) - self.seq - 1,
+                                   self.batch)
+        idx = starts[:, None] + np.arange(self.seq + 1)[None]
+        window = self.tokens[idx]
+        return {"tokens": window[:, :-1].astype(np.int32),
+                "labels": window[:, 1:].astype(np.int32)}

@@ -1,0 +1,360 @@
+"""Sharding policies + pjit step builders for the production mesh.
+
+Two policies (DESIGN.md §4):
+
+* ``node_dp``  — the DL **node axis is a mesh axis**: node i's replica
+  lives on data-slice i, each replica tensor-parallel over ``model``.
+  Morph's model exchange (`W @ params`) becomes collectives on the
+  ``data`` (and ``pod``) axis — the paper's network traffic, as HLO.
+* ``node_fsdp`` — few large nodes: the node axis is replicated
+  (multi-pod: sharded over ``pod``), every node's params sharded jointly
+  over ``data`` x ``model`` (FSDP + TP).  Mixing is then mostly local.
+
+Per-leaf specs are chosen by a path-aware heuristic:
+  - MoE expert banks ``[E, d, ff]`` shard the expert axis over ``model``
+    (expert parallelism; the all-to-all shows up in the dry-run HLO);
+  - otherwise the last mesh-divisible dim goes to ``model`` and (fsdp)
+    the largest remaining divisible dim goes to ``data``;
+  - the scan period axis is never sharded.
+
+The builders return jitted steps with explicit in/out shardings; lowering
+them on ShapeDtypeStructs is the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import (MorphGraphState, apply_mixing, init_state,
+                    uniform_weights_jax, update_topology)
+from ..models import model
+from ..optim import Optimizer, apply_updates, sgd
+
+# ---------------------------------------------------------------------------
+# Sharding heuristics.
+# ---------------------------------------------------------------------------
+
+_EXPERT_KEYS = ("up", "down", "gate")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def node_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "name"):
+            out.append(str(e.name))
+    return tuple(out)
+
+
+def _node_spec(mesh: Mesh, n: int):
+    """Greedy mesh axes for the node axis: ('pod','data') when both
+    divide, else whichever does, else replicated."""
+    used = []
+    rem = n
+    for a in node_axes(mesh):
+        size = _axis_size(mesh, a)
+        if size > 1 and rem % size == 0:
+            used.append(a)
+            rem //= size
+    if not used:
+        return None
+    return used[0] if len(used) == 1 else tuple(used)
+
+
+def leaf_spec(path, shape: Tuple[int, ...], *, policy: str, mesh: Mesh,
+              num_periods: int, n_nodes: int) -> P:
+    """PartitionSpec for one node-stacked parameter leaf [n_nodes, ...]."""
+    names = _path_names(path)
+    spec: list = [None] * len(shape)
+    dsize, msize = _axis_size(mesh, "data"), _axis_size(mesh, "model")
+    psize = _axis_size(mesh, "pod")
+
+    # --- node axis (dim 0) --------------------------------------------------
+    if policy == "node_dp":
+        spec[0] = _node_spec(mesh, shape[0])
+    else:  # node_fsdp: node axis over pod when divisible, else replicated
+        if psize > 1 and shape[0] % psize == 0:
+            spec[0] = "pod"
+
+    # --- body dims ----------------------------------------------------------
+    start = 1
+    skip = set()
+    if len(shape) > start and shape[start] == num_periods \
+            and len(shape) > start + 1:
+        skip.add(start)                     # never shard the scan axis
+    cand = [i for i in range(start, len(shape)) if i not in skip]
+
+    # expert banks: expert axis -> model (expert parallelism)
+    is_expert_bank = (names and names[-1] in _EXPERT_KEYS
+                      and len(cand) >= 3)
+    model_dim = None
+    if is_expert_bank:
+        e_dim = cand[0]
+        if shape[e_dim] % msize == 0 and msize > 1:
+            spec[e_dim] = "model"
+            model_dim = e_dim
+    if model_dim is None and msize > 1:
+        for i in reversed(cand):
+            if shape[i] % msize == 0 and shape[i] >= msize:
+                spec[i] = "model"
+                model_dim = i
+                break
+    if policy == "node_fsdp" and dsize > 1:
+        rest = [i for i in cand if i != model_dim]
+        rest.sort(key=lambda i: -shape[i])
+        for i in rest:
+            if shape[i] % dsize == 0 and shape[i] >= dsize:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def params_sharding(mesh: Mesh, cfg, params_shape) -> Any:
+    """Tree of NamedShardings for node-stacked params (leading axis =
+    node)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, leaf_spec(path, leaf.shape, policy=cfg.sharding_policy,
+                            mesh=mesh, num_periods=cfg.num_periods,
+                            n_nodes=leaf.shape[0])),
+        params_shape)
+
+
+def batch_sharding(mesh: Mesh, cfg, n_nodes: int,
+                   per_node_batch: Optional[int] = None) -> NamedSharding:
+    """[n_nodes, per_node_batch, seq] inputs."""
+    if cfg.sharding_policy == "node_dp":
+        return NamedSharding(mesh, P(_node_spec(mesh, n_nodes), None, None))
+    pod = ("pod" if "pod" in mesh.axis_names
+           and n_nodes % _axis_size(mesh, "pod") == 0 else None)
+    data = ("data" if per_node_batch is None
+            or (per_node_batch % _axis_size(mesh, "data") == 0
+                and per_node_batch >= _axis_size(mesh, "data")) else None)
+    return NamedSharding(mesh, P(pod, data, None))
+
+
+def cache_spec(path, shape, *, policy: str, mesh: Mesh,
+               num_periods: int) -> P:
+    """Decode caches: [n, (periods,) batch, seq, kv_heads, head_dim] KV
+    buffers and [n, (periods,) batch, ...] SSM states.  Batch goes to
+    ``data`` (dp: node axis does), the innermost divisible feature dim to
+    ``model`` (kv_heads often < model size, head_dim shards fine)."""
+    msize, dsize = _axis_size(mesh, "model"), _axis_size(mesh, "data")
+    psize = _axis_size(mesh, "pod")
+    spec: list = [None] * len(shape)
+    n = shape[0]
+    if policy == "node_dp":
+        spec[0] = _node_spec(mesh, n)
+    elif psize > 1 and n % psize == 0:
+        spec[0] = "pod"
+    i = 1
+    if len(shape) > i and shape[i] == num_periods and len(shape) > i + 1:
+        i += 1                               # skip stacked period axis
+    # batch dim -> data (fsdp) — dp already used data for nodes
+    if policy == "node_fsdp" and len(shape) > i \
+            and shape[i] % dsize == 0 and dsize > 1:
+        spec[i] = "data"
+    # innermost divisible dim -> model
+    if msize > 1:
+        for j in reversed(range(i + 1, len(shape))):
+            if shape[j] % msize == 0 and shape[j] >= msize:
+                spec[j] = "model"
+                break
+    return P(*spec)
+
+
+def cache_sharding(mesh: Mesh, cfg, cache_shape) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf.shape, policy=cfg.sharding_policy,
+                             mesh=mesh, num_periods=cfg.num_periods)),
+        cache_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def serve_kv_spec(mesh: Mesh, cfg, per_node_batch: int) -> P:
+    """PartitionSpec for one node's KV buffer [b, t, kvh, hd] (matches
+    what cache_sharding assigns to the node-stacked leaf)."""
+    msize, dsize = _axis_size(mesh, "model"), _axis_size(mesh, "data")
+    spec = [None, None, None, None]
+    if cfg.sharding_policy == "node_fsdp" and dsize > 1 \
+            and per_node_batch % dsize == 0:
+        spec[0] = "data"
+    for j, size in ((3, cfg.head_dim), (2, cfg.num_kv_heads)):
+        if msize > 1 and size % msize == 0 and size >= msize:
+            spec[j] = "model"
+            break
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# Decentralized train step (paper Alg. 2, one full superstep in-graph).
+# ---------------------------------------------------------------------------
+
+class MorphHParams(NamedTuple):
+    k: int = 3                  # in-degree / out-degree cap
+    view_size: int = 5          # k + |R| (Fig. 2: two random edges)
+    beta: float = 500.0         # paper default softmax sharpness
+    sim_every: bool = True      # include Eq. 3/4 + matching in the step
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    morph: MorphGraphState
+
+
+def init_train_state(key, cfg, optimizer: Optimizer, n_nodes: int
+                     ) -> TrainState:
+    kp, km = jax.random.split(key)
+    node_keys = jax.random.split(kp, n_nodes)
+    params = jax.vmap(lambda k: model.init_params(k, cfg))(node_keys)
+    opt_state = jax.vmap(optimizer.init)(params)
+    ring = jnp.roll(jnp.eye(n_nodes, dtype=bool), 1, axis=1) \
+        | jnp.roll(jnp.eye(n_nodes, dtype=bool), -1, axis=1) \
+        if n_nodes > 1 else jnp.zeros((1, 1), bool)
+    morph = init_state(km, ring)
+    return TrainState(params, opt_state, morph)
+
+
+def make_train_step(cfg, optimizer: Optimizer, hp: MorphHParams,
+                    *, microbatch: Optional[int] = None,
+                    do_topology: bool = True, window="cfg"):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    One paper round: per-node local step (grad-accumulated over
+    microbatches), optimizer update, then Morph topology negotiation
+    (every Δ_r — caller picks via ``do_topology``) and W-mixing.
+    """
+
+    def node_grads(p, b):
+        B = b["tokens"].shape[0]
+        mb = microbatch or B
+        if B % mb != 0:
+            raise ValueError(f"batch {B} not divisible by microbatch {mb}")
+        steps = B // mb
+        if steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda q: model.loss_fn(q, b, cfg, window=window),
+                has_aux=True)(p)
+            return grads, loss
+
+        def mb_step(acc, i):
+            sl = jax.tree_util.tree_map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb), b)
+            (loss, _), g = jax.value_and_grad(
+                lambda q: model.loss_fn(q, sl, cfg, window=window),
+                has_aux=True)(p)
+            acc = jax.tree_util.tree_map(
+                lambda a, gg: a + gg.astype(a.dtype) / steps, acc, g)
+            return acc, loss
+
+        zeros = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.dtype(cfg.param_dtype)
+                                if cfg.sharding_policy == "node_fsdp"
+                                else jnp.float32), p)
+        grads, losses = jax.lax.scan(mb_step, zeros, jnp.arange(steps))
+        return grads, losses.mean()
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        grads, losses = jax.vmap(node_grads)(state.params, batch)
+
+        def upd_one(g, s, p):
+            upd, s = optimizer.update(g, s, p)
+            return apply_updates(p, upd), s
+
+        params, opt_state = jax.vmap(upd_one)(grads, state.opt_state,
+                                              state.params)
+        n = losses.shape[0]
+        if n > 1:
+            if do_topology:
+                morph, w = update_topology(
+                    state.morph, params, k=min(hp.k, n - 1),
+                    view_size=min(hp.view_size, n - 1), beta=hp.beta)
+            else:
+                morph, w = state.morph, uniform_weights_jax(
+                    state.morph.edges)
+            params = apply_mixing(w, params)
+        else:
+            morph = state.morph
+        metrics = {"loss": losses.mean(),
+                   "per_node_loss": losses}
+        return TrainState(params, opt_state, morph), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg, *, window="cfg", kv_spec=None):
+    """Returns ``serve_step(params, cache, tokens, pos) -> (logits, cache)``
+    for node-stacked state: tokens [n, b, 1], caches [n, ...].
+
+    ``kv_spec``: optional PartitionSpec for the per-node KV buffers
+    [b, t, kvh, hd] — pins cache shardings so SPMD reshards the 1-token
+    update instead of the multi-GB cache (see attention module)."""
+
+    def serve_step(params, cache, tokens, pos):
+        def one(p, c, t):
+            return model.decode_step(p, c, t, pos, cfg, window=window,
+                                     kv_spec=kv_spec)
+        return jax.vmap(one)(params, cache, tokens)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharded state/step assembly (used by dryrun + train launcher).
+# ---------------------------------------------------------------------------
+
+def abstract_train_state(cfg, optimizer: Optimizer, n_nodes: int):
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, optimizer, n_nodes),
+        jax.random.PRNGKey(0))
+
+
+def abstract_stacked_params(cfg, n_nodes: int):
+    """ShapeDtypeStruct tree of node-stacked params (no allocation)."""
+    def build(keys):
+        return jax.vmap(lambda k: model.init_params(k, cfg))(keys)
+    return jax.eval_shape(build,
+                          jax.random.split(jax.random.PRNGKey(0), n_nodes))
+
+
+def abstract_cache(cfg, n_nodes: int, per_node_batch: int, max_len: int):
+    """ShapeDtypeStruct tree of node-stacked decode caches."""
+    def build(dummy):
+        return jax.vmap(
+            lambda _: model.init_cache(cfg, per_node_batch, max_len)
+        )(dummy)
+    return jax.eval_shape(build, jnp.arange(n_nodes))
+
+
+def train_state_sharding(mesh: Mesh, cfg, state_shape) -> TrainState:
+    params_sh = params_sharding(mesh, cfg, state_shape.params)
+    # optimizer state mirrors params (count scalars replicated)
+    def opt_leaf(path, leaf):
+        if leaf.ndim <= 1:
+            return replicated(mesh)
+        return NamedSharding(mesh, leaf_spec(
+            path, leaf.shape, policy=cfg.sharding_policy, mesh=mesh,
+            num_periods=cfg.num_periods, n_nodes=leaf.shape[0]))
+    opt_sh = jax.tree_util.tree_map_with_path(opt_leaf, state_shape.opt_state)
+    morph_sh = jax.tree_util.tree_map(lambda _: replicated(mesh),
+                                      state_shape.morph)
+    return TrainState(params_sh, opt_sh, MorphGraphState(*morph_sh))

@@ -1,0 +1,127 @@
+"""Decentralized-learning round loop (the paper's experiment engine).
+
+Runs Algorithm 1/2 semantics for a population of n nodes whose parameters
+are stacked on a leading node axis:
+
+  per round:  local SGD step per node (vmapped)
+              -> strategy emits (edges, W)        [host control plane]
+              -> params <- W @ params             [device mixing]
+
+The strategy is any :class:`repro.core.TopologyStrategy` — Static,
+Fully-Connected, Epidemic Learning, or the full Morph protocol — so the
+paper's Table I / Figs. 3-7 are one loop with four strategies.  Evaluation
+follows §IV-A4: every node on the shared test set, mean + inter-node
+variance.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import apply_mixing, isolated_nodes
+from ..data.pipeline import StackedBatcher
+from ..optim import Optimizer, apply_updates
+from .metrics import MetricsLog, RoundRecord, internode_variance
+
+
+@dataclass
+class RunnerConfig:
+    n_nodes: int
+    rounds: int
+    eval_every: int = 20
+    model_bytes: Optional[int] = None      # per-transfer payload (default:
+                                           # actual param bytes)
+    sim_every: int = 1                     # recompute stacked sims every r
+    seed: int = 0
+
+
+class DecentralizedRunner:
+    """Strategy-agnostic D-PSGD runner over stacked node params."""
+
+    def __init__(self, *, init_fn: Callable, loss_fn: Callable,
+                 eval_fn: Callable, optimizer: Optimizer,
+                 batcher: StackedBatcher, test_batch: Dict[str, np.ndarray],
+                 strategy, cfg: RunnerConfig):
+        self.cfg = cfg
+        self.strategy = strategy
+        self.batcher = batcher
+        self.test_batch = {k: jnp.asarray(v) for k, v in test_batch.items()}
+        keys = jax.random.split(jax.random.PRNGKey(cfg.seed), cfg.n_nodes)
+        self.params = jax.vmap(init_fn)(keys)
+        self.opt = optimizer
+        self.opt_state = jax.vmap(optimizer.init)(self.params)
+        self._loss_fn = loss_fn
+        self._eval_fn = eval_fn
+        self.log = MetricsLog()
+        self._comm_bytes = 0
+        self._model_bytes = cfg.model_bytes or sum(
+            x.nbytes // cfg.n_nodes
+            for x in jax.tree_util.tree_leaves(self.params))
+
+        @jax.jit
+        def local_step(params, opt_state, batch):
+            def one(p, s, b):
+                grads = jax.grad(lambda q: self._loss_fn(q, b)[0])(p)
+                upd, s = self.opt.update(grads, s, p)
+                return apply_updates(p, upd), s
+            return jax.vmap(one)(params, opt_state, batch)
+
+        @jax.jit
+        def mix(params, w):
+            return apply_mixing(w, params)
+
+        @jax.jit
+        def evaluate(params, test):
+            def one(p):
+                loss, m = self._eval_fn(p, test)
+                return loss, m
+            return jax.vmap(one)(params)
+
+        self._local_step = local_step
+        self._mix = mix
+        self._evaluate = evaluate
+
+    # ------------------------------------------------------------------
+
+    def _round(self, rnd: int) -> np.ndarray:
+        batch = {k: jnp.asarray(v) for k, v in self.batcher.next().items()}
+        self.params, self.opt_state = self._local_step(
+            self.params, self.opt_state, batch)
+        stacked = jax.device_get(self.params) \
+            if rnd % self.cfg.sim_every == 0 else None
+        edges, w = self.strategy.round_edges(rnd, stacked)
+        self.params = self._mix(self.params, jnp.asarray(w, jnp.float32))
+        self._comm_bytes += int(edges.sum()) * self._model_bytes
+        return edges
+
+    def evaluate(self, rnd: int, edges: np.ndarray) -> RoundRecord:
+        losses, metrics = self._evaluate(self.params, self.test_batch)
+        acc = np.asarray(metrics["accuracy"])
+        rec = RoundRecord(
+            rnd=rnd,
+            mean_accuracy=float(acc.mean()),
+            mean_loss=float(np.asarray(losses).mean()),
+            internode_variance=internode_variance(acc),
+            comm_bytes=self._comm_bytes,
+            isolated=len(isolated_nodes(edges)),
+            per_node_accuracy=acc,
+        )
+        self.log.add(rec)
+        return rec
+
+    def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
+            ) -> MetricsLog:
+        edges = np.zeros((self.cfg.n_nodes, self.cfg.n_nodes), bool)
+        for rnd in range(self.cfg.rounds):
+            edges = self._round(rnd)
+            if rnd % self.cfg.eval_every == 0 \
+                    or rnd == self.cfg.rounds - 1:
+                rec = self.evaluate(rnd, edges)
+                if progress is not None:
+                    progress(rec)
+        return self.log

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+``pairwise_cosine``: blocked Gram-matrix cosine similarity (Eq. 3);
+``graph_mix`` / ``graph_mix_masked``: blocked W @ X node mixing
+(Alg. 2 l.12); ``selective_scan``: fused Mamba S6 recurrence (the TPU
+answer to the paper's CUDA selective-scan dependency via Jamba).
+``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles that the
+kernel tests assert against.
+"""
+from . import ops, ref
+from .graph_mix import graph_mix, graph_mix_masked
+from .pairwise_cosine import gram_matrix
+from .selective_scan import selective_scan
+
+__all__ = ["ops", "ref", "graph_mix", "graph_mix_masked", "gram_matrix",
+           "selective_scan"]

@@ -1,0 +1,90 @@
+"""jit'd wrappers around the Pallas kernels.
+
+Handle padding to block multiples, dtype policy, pytree flattening and
+the Eq.-3 layer averaging.  On CPU (this container) pass
+``interpret=True``; on TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .graph_mix import (DEFAULT_BLOCK_D, graph_mix, graph_mix_masked)
+from .pairwise_cosine import gram_matrix
+
+_EPS = 1e-12
+
+
+def _pad_d(x: jax.Array, block_d: int) -> jax.Array:
+    d = x.shape[-1]
+    rem = d % block_d
+    if rem == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, block_d - rem)))
+
+
+def _pick_block(d: int, block_d: Optional[int]) -> int:
+    if block_d is not None:
+        return block_d
+    return min(DEFAULT_BLOCK_D, max(128, d))
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pairwise_cosine(x: jax.Array, *, block_d: Optional[int] = None,
+                    interpret: bool = False) -> jax.Array:
+    """Cosine similarity between all rows of ``X [n, D]`` -> [n, n]."""
+    bd = _pick_block(x.shape[-1], block_d)
+    g = gram_matrix(_pad_d(x, bd), block_d=bd, interpret=interpret)
+    norms = jnp.maximum(jnp.sqrt(jnp.diag(g)), _EPS)
+    return g / (norms[:, None] * norms[None, :])
+
+
+def model_pairwise_cosine(stacked_params, *, block_d: Optional[int] = None,
+                          interpret: bool = False) -> jax.Array:
+    """Eq. 3 on a node-stacked pytree: per-leaf cosine, averaged.
+
+    Drop-in ``sim_fn`` for :func:`repro.core.morph.update_topology`.
+    """
+    leaves = jax.tree_util.tree_leaves(stacked_params)
+    n = leaves[0].shape[0]
+    acc = jnp.zeros((n, n), jnp.float32)
+    for leaf in leaves:
+        acc += pairwise_cosine(leaf.reshape(n, -1), block_d=block_d,
+                               interpret=interpret)
+    return acc / len(leaves)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def mix(w: jax.Array, x: jax.Array, *, block_d: Optional[int] = None,
+        interpret: bool = False) -> jax.Array:
+    """``W @ X`` with D-blocking; pads/unpads D transparently."""
+    d = x.shape[-1]
+    bd = _pick_block(d, block_d)
+    y = graph_mix(w, _pad_d(x, bd), block_d=bd, interpret=interpret)
+    return y[:, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def mix_masked(edges: jax.Array, x: jax.Array, *,
+               block_d: Optional[int] = None,
+               interpret: bool = False) -> jax.Array:
+    """Fused uniform-average mixing from the raw in-edge matrix."""
+    d = x.shape[-1]
+    bd = _pick_block(d, block_d)
+    y = graph_mix_masked(edges, _pad_d(x, bd), block_d=bd,
+                         interpret=interpret)
+    return y[:, :d]
+
+
+def mix_pytree(w: jax.Array, stacked_params, *, interpret: bool = False):
+    """Apply ``W`` to every leaf of a node-stacked pytree via the kernel
+    (host-layout path; the sharded runtime uses core.mixing.apply_mixing)."""
+    def one(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        return mix(w, flat, interpret=interpret).reshape(
+            leaf.shape).astype(leaf.dtype)
+    return jax.tree_util.tree_map(one, stacked_params)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def gram_matrix_ref(x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    return xf @ xf.T
+
+
+def pairwise_cosine_ref(x: jax.Array) -> jax.Array:
+    g = gram_matrix_ref(x)
+    norms = jnp.maximum(jnp.sqrt(jnp.diag(g)), _EPS)
+    return g / (norms[:, None] * norms[None, :])
+
+
+def graph_mix_ref(w: jax.Array, x: jax.Array) -> jax.Array:
+    return (w.astype(jnp.float32) @ x.astype(jnp.float32)).astype(x.dtype)
+
+
+def graph_mix_masked_ref(edges: jax.Array, x: jax.Array) -> jax.Array:
+    n = edges.shape[0]
+    w = edges.astype(jnp.float32) + jnp.eye(n, dtype=jnp.float32)
+    w = w / w.sum(axis=1, keepdims=True)
+    return graph_mix_ref(w, x)
+
+
+def selective_scan_ref(x, dt, b, c, a, h0):
+    """Direct S6 recurrence: the oracle for kernels.selective_scan.
+
+    x, dt: [batch, L, di]; b, c: [batch, L, ds]; a: [di, ds];
+    h0: [batch, di, ds] -> (y [batch, L, di] f32, h [batch, di, ds] f32).
+    """
+    f32 = jnp.float32
+    x, dt, b, c, h0 = (t.astype(f32) for t in (x, dt, b, c, h0))
+    a = a.astype(f32)
+
+    def step(h, inputs):
+        x_t, dt_t, b_t, c_t = inputs               # [bt,di],[bt,di],[bt,ds]
+        da = jnp.exp(dt_t[..., None] * a[None])    # [bt, di, ds]
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0,
+                         (x.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+                          b.transpose(1, 0, 2), c.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), h
+
+
+def layer_averaged_cosine_ref(stacked_params) -> jax.Array:
+    """Eq. 3 over a node-stacked pytree (same semantics as
+    ``repro.core.similarity.pairwise_model_similarity``)."""
+    leaves = jax.tree_util.tree_leaves(stacked_params)
+    n = leaves[0].shape[0]
+    acc = jnp.zeros((n, n), jnp.float32)
+    for leaf in leaves:
+        acc += pairwise_cosine_ref(leaf.reshape(n, -1))
+    return acc / len(leaves)

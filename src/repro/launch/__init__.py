@@ -1,0 +1,14 @@
+"""Launchers: production mesh, multi-pod dry-run, training driver.
+
+``dryrun`` must be imported first in its process (it sets XLA_FLAGS for
+512 placeholder devices); ``mesh``/``shapes`` are import-safe anywhere.
+"""
+from .mesh import (CHIP_HBM_BYTES, HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                   make_production_mesh, mesh_chips)
+from .shapes import (SHAPES, TRAIN_MICROBATCH, ShapeSpec, cache_len,
+                     input_specs, shape_config, skip_reason)
+
+__all__ = ["CHIP_HBM_BYTES", "HBM_BW", "ICI_BW", "PEAK_FLOPS_BF16",
+           "make_production_mesh", "mesh_chips", "SHAPES",
+           "TRAIN_MICROBATCH", "ShapeSpec", "cache_len", "input_specs",
+           "shape_config", "skip_reason"]

@@ -1,0 +1,423 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+``compiled.cost_analysis()`` visits every ``while`` body **once** — for a
+scan-over-layers program that undercounts FLOPs/bytes/collectives by the
+trip count (96x for nemotron!).  XLA does record
+``backend_config={"known_trip_count":{"n":...}}`` on each while op, so we
+parse the post-SPMD HLO text into its computation tree and accumulate
+costs with proper multipliers:
+
+  flops:  dot = 2 * result_elems * contracted_size; elementwise = elems;
+          reduce = input elems.
+  bytes:  per op: operand bytes + result bytes, fusions counted at their
+          boundary only (inner ops are register/VMEM traffic).
+  collectives: result bytes per op (all-reduce weighted 2x for its
+          reduce-scatter + all-gather ring phases), tallied per kind.
+
+This is a first-order model of what a TPU executes per step — the basis
+for all three roofline terms in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "sqrt", "rsqrt", "cbrt", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "cosine", "sine", "logistic",
+    "atan2", "remainder", "erf", "expm1",
+}
+_FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "opt-barrier", "partition-id",
+    "replica-id", "domain",
+}
+_COLLECTIVES = {
+    "all-gather": 1.0, "all-gather-start": 1.0,
+    "all-reduce": 2.0, "all-reduce-start": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0, "collective-permute-start": 1.0,
+}
+_SKIP = {"all-gather-done", "all-reduce-done", "collective-permute-done",
+         "async-done", "async-update", "copy-done"}
+
+
+def _type_elems_bytes(type_text: str) -> Tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class Op:
+    name: str
+    type_text: str
+    opcode: str
+    line: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_per_kind: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.collective_bytes += mult * other.collective_bytes
+        for k, v in other.collective_per_kind.items():
+            self.collective_per_kind[k] = (
+                self.collective_per_kind.get(k, 0.0) + mult * v)
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = (
+                self.collective_counts.get(k, 0.0) + mult * v)
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self.op_types: Dict[str, str] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # -- parsing -----------------------------------------------------------
+
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and line.rstrip().endswith("{") \
+                    and "->" in line:
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    current = m.group(1)
+                    self.computations[current] = []
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = current
+                continue
+            if line.strip() == "}":
+                continue
+            m = _OP_RE.match(line)
+            if m and current is not None:
+                name, type_text, opcode = m.group(1), m.group(2), m.group(3)
+                op = Op(name=name, type_text=type_text, opcode=opcode,
+                        line=line)
+                self.computations[current].append(op)
+                self.op_types[name] = type_text
+
+    # -- costing -----------------------------------------------------------
+
+    def _operand_names(self, op: Op) -> List[str]:
+        # operands live between the first '(' after the opcode and its
+        # matching ')': grab %refs from that span
+        idx = op.line.find(op.opcode + "(")
+        span = op.line[idx + len(op.opcode) + 1:]
+        depth = 1
+        out = []
+        buf = []
+        for ch in span:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf.append(ch)
+        return _OPERANDS_RE.findall("".join(buf))
+
+    def _fusion_boundary_bytes(self, op: Op, called: str,
+                               res_bytes: int) -> float:
+        """HBM traffic at a fusion boundary, slice-aware.
+
+        An operand consumed ONLY by dynamic-slice inside the fusion is
+        read at slice granularity; an operand that is only the target of
+        an in-fusion dynamic-update-slice is aliased in place (only the
+        updated region is written).  Everything else is full-size.
+        """
+        inner_ops = self.computations.get(called, [])
+        operand_names = self._operand_names(op)
+        # parameter index -> inner op name
+        params: Dict[int, str] = {}
+        for o in inner_ops:
+            if o.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", o.line)
+                if pm:
+                    params[int(pm.group(1))] = o.name
+        # inner op -> consumers
+        consumers: Dict[str, List[Op]] = {}
+        for o in inner_ops:
+            if o.opcode == "parameter":
+                continue
+            for ref in self._operand_names(o):
+                consumers.setdefault(ref, []).append(o)
+
+        total = 0.0
+        dus_write = 0.0
+        has_dus = any(o.opcode == "dynamic-update-slice"
+                      for o in inner_ops)
+        for idx, outer in enumerate(operand_names):
+            _, full_b = _type_elems_bytes(self.op_types.get(outer, ""))
+            pname = params.get(idx)
+            cons = consumers.get(pname, []) if pname else []
+            if cons and all(x.opcode == "dynamic-slice" for x in cons):
+                total += sum(_type_elems_bytes(x.type_text)[1]
+                             for x in cons)
+            elif cons and all(
+                    x.opcode == "dynamic-update-slice"
+                    and self._operand_names(x)[:1] == [pname]
+                    for x in cons):
+                # aliased update target: write the update region only
+                for x in cons:
+                    refs = self._operand_names(x)
+                    if len(refs) > 1:
+                        _, ub = _type_elems_bytes(
+                            self.op_types.get(refs[1], ""))
+                        dus_write += ub
+            else:
+                total += full_b
+        if has_dus:
+            total += max(dus_write, 0.0)
+        else:
+            total += res_bytes
+        return total
+
+    def _dot_flops(self, op: Op) -> float:
+        res_elems, _ = _type_elems_bytes(op.type_text)
+        m = _LHS_CONTRACT_RE.search(op.line)
+        k = 1
+        if m:
+            operands = self._operand_names(op)
+            if operands:
+                lhs_type = self.op_types.get(operands[0], "")
+                shapes = _SHAPE_RE.findall(lhs_type)
+                if shapes:
+                    dims = [int(d) for d in shapes[0][1].split(",") if d]
+                    for ci in m.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+        return 2.0 * res_elems * k
+
+    def _op_cost(self, op: Op) -> Cost:
+        c = Cost()
+        opcode = op.opcode
+        if opcode in _FREE or opcode in _SKIP:
+            return c
+        res_elems, res_bytes = _type_elems_bytes(op.type_text)
+
+        # control flow / nested computations
+        if opcode == "while":
+            m = _TRIP_RE.search(op.line)
+            trip = int(m.group(1)) if m else 1
+            if not m:
+                c.unknown_trip_whiles += 1
+            body = _BODY_RE.search(op.line)
+            if body:
+                c.add(self.computation_cost(body.group(1)), mult=trip)
+            return c
+        if opcode == "fusion":
+            m = _CALLS_RE.search(op.line)
+            if m:
+                inner = self.computation_cost(m.group(1))
+                c.flops += inner.flops
+                c.collective_bytes += inner.collective_bytes
+                for k, v in inner.collective_per_kind.items():
+                    c.collective_per_kind[k] = \
+                        c.collective_per_kind.get(k, 0.0) + v
+                for k, v in inner.collective_counts.items():
+                    c.collective_counts[k] = \
+                        c.collective_counts.get(k, 0.0) + v
+                c.unknown_trip_whiles += inner.unknown_trip_whiles
+                c.bytes += self._fusion_boundary_bytes(op, m.group(1),
+                                                       res_bytes)
+            else:
+                c.bytes += res_bytes
+            return c
+        if opcode == "call":
+            m = _TOAPPLY_RE.search(op.line)
+            if m:
+                c.add(self.computation_cost(m.group(1)))
+            return c
+        if opcode == "conditional":
+            m = _BRANCHES_RE.search(op.line)
+            if m:
+                branches = _OPERANDS_RE.findall(m.group(1))
+                if branches:
+                    costs = [self.computation_cost(b) for b in branches]
+                    c.add(max(costs, key=lambda x: x.flops))
+            return c
+
+        # collectives
+        if opcode in _COLLECTIVES:
+            kind = opcode.replace("-start", "")
+            w = _COLLECTIVES[opcode]
+            c.collective_bytes += w * res_bytes
+            c.collective_per_kind[kind] = \
+                c.collective_per_kind.get(kind, 0.0) + res_bytes
+            c.collective_counts[kind] = \
+                c.collective_counts.get(kind, 0.0) + 1
+            c.bytes += res_bytes
+            return c
+
+        # slicing ops touch the slice, not the sliced buffer (XLA
+        # aliases in-place where possible)
+        if opcode == "dynamic-update-slice":
+            ob = [_type_elems_bytes(self.op_types.get(o, ""))[1]
+                  for o in self._operand_names(op)]
+            big = max(ob, default=0)
+            c.bytes += 2 * max(sum(ob) - big, 0)
+            return c
+        if opcode in ("dynamic-slice", "gather"):
+            c.bytes += 2 * res_bytes
+            return c
+        if opcode == "scatter":
+            ob = [_type_elems_bytes(self.op_types.get(o, ""))[1]
+                  for o in self._operand_names(op)]
+            big = max(ob, default=0)
+            upd = max(sum(ob) - big, 0)
+            c.bytes += 2 * upd
+            c.flops += upd // 4              # combine fn, ~1 per element
+            return c
+
+        # plain compute ops: boundary bytes
+        for o in self._operand_names(op):
+            _, b = _type_elems_bytes(self.op_types.get(o, ""))
+            c.bytes += b
+        c.bytes += res_bytes
+
+        if opcode == "dot":
+            c.flops += self._dot_flops(op)
+        elif opcode == "convolution":
+            # output elems x (2 * kernel elems) — good enough for the CNNs
+            operands = self._operand_names(op)
+            kelems = 0
+            if len(operands) >= 2:
+                kelems, _ = _type_elems_bytes(
+                    self.op_types.get(operands[1], ""))
+            c.flops += 2.0 * res_elems * max(kelems, 1) ** 0.5
+        elif opcode in _ELEMENTWISE:
+            c.flops += res_elems
+        elif opcode in ("reduce", "reduce-window"):
+            operands = self._operand_names(op)
+            in_elems = res_elems
+            if operands:
+                in_elems, _ = _type_elems_bytes(
+                    self.op_types.get(operands[0], ""))
+            c.flops += in_elems
+        return c
+
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        total = Cost()
+        self._memo[name] = total          # break cycles defensively
+        for op in self.computations.get(name, []):
+            total.add(self._op_cost(op))
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self.computation_cost(self.entry)
+
+
+def top_ops(hlo_text: str, n: int = 20, by: str = "bytes"
+            ) -> List[Tuple[float, str, float, str]]:
+    """Top-n individual HLO ops by multiplier-weighted cost.
+
+    Returns (weighted_cost, opcode, multiplier, op-line head) tuples —
+    the profile view used by the §Perf hypothesis loop.
+    """
+    model = HloCostModel(hlo_text)
+    if model.entry is None:
+        return []
+    out: List[Tuple[float, str, float, str]] = []
+
+    def walk(comp: str, mult: float, depth: int = 0):
+        if depth > 50:
+            return
+        for op in model.computations.get(comp, []):
+            if op.opcode == "while":
+                m = _TRIP_RE.search(op.line)
+                trip = int(m.group(1)) if m else 1
+                body = _BODY_RE.search(op.line)
+                if body:
+                    walk(body.group(1), mult * trip, depth + 1)
+                continue
+            if op.opcode == "fusion":
+                m = _CALLS_RE.search(op.line)
+                c = model._op_cost(op)
+                val = c.flops if by == "flops" else c.bytes
+                if val > 0:
+                    out.append((mult * val, "fusion", mult,
+                                op.line.strip()[:160]))
+                continue
+            if op.opcode == "call":
+                m = _TOAPPLY_RE.search(op.line)
+                if m:
+                    walk(m.group(1), mult, depth + 1)
+                continue
+            c = model._op_cost(op)
+            val = c.flops if by == "flops" else (
+                c.collective_bytes if by == "collective" else c.bytes)
+            if val > 0:
+                out.append((mult * val, op.opcode, mult,
+                            op.line.strip()[:160]))
+
+    walk(model.entry, 1.0)
+    out.sort(key=lambda t: -t[0])
+    return out[:n]
+
+
+def analyse_hlo(hlo_text: str) -> Dict[str, float]:
+    cost = HloCostModel(hlo_text).entry_cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collective_per_kind": dict(cost.collective_per_kind),
+        "collective_counts": dict(cost.collective_counts),
+        "unknown_trip_whiles": cost.unknown_trip_whiles,
+    }

@@ -1,0 +1,26 @@
+"""Production mesh definitions (TPU v5e pods; see DESIGN.md §4).
+
+Functions, not module-level constants, so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+CHIP_HBM_BYTES = 16 * 1024**3
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16).
+    Multi-pod: 2 pods = 512 chips as (pod=2, data=16, model=16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

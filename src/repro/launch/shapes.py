@@ -1,0 +1,143 @@
+"""The four assigned input shapes -> ShapeDtypeStruct ``input_specs``.
+
+=============  =========  ============  =========================
+shape          seq_len    global_batch  lowered step
+=============  =========  ============  =========================
+train_4k           4,096           256  train_step (Alg. 2 superstep)
+prefill_32k       32,768            32  prefill (forward, last logits)
+decode_32k        32,768           128  serve_step (1 token, 32k cache)
+long_500k        524,288             1  serve_step (1 token, 500k ctx)
+=============  =========  ============  =========================
+
+Per-arch adaptations (recorded in DESIGN.md §4):
+  * whisper-tiny caps decoder positions at 448 (its spec) — train/prefill
+    use dec_len=448 + the 1500-frame encoder; ``long_500k`` is SKIPPED.
+  * ``long_500k`` needs sub-quadratic attention: native for rwkv6/jamba;
+    dense archs run the beyond-paper sliding-window variant (window 8192,
+    ring KV cache); serving n_nodes=1 (one global request).
+  * VLM archs reserve ``frontend_tokens`` of the sequence for stub patch
+    embeddings (precomputed, 1024-dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F = jax.ShapeDtypeStruct
+
+SLIDING_WINDOW_500K = 8192
+_VISION_DIM = 1024
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                 # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# Per-node microbatch for train_4k grad accumulation (memory budget per
+# DESIGN.md §4; None = whole per-node batch in one shot).
+TRAIN_MICROBATCH = {
+    "jamba-1.5-large-398b": 8,
+    "qwen1.5-110b": 16,
+    "nemotron-4-340b": 4,
+    "llama4-scout-17b-a16e": 16,
+    "pixtral-12b": 8,
+    "rwkv6-7b": 8,
+    "deepseek-moe-16b": 8,
+    "llama3.2-3b": 8,
+    "phi4-mini-3.8b": 8,
+    "whisper-tiny": None,
+}
+
+
+def skip_reason(cfg, shape: ShapeSpec) -> Optional[str]:
+    if shape.name == "long_500k" and cfg.name.startswith("whisper"):
+        return ("enc-dec with 448 decoder positions by spec; a 500k causal "
+                "decode is architecturally meaningless (DESIGN.md §4)")
+    return None
+
+
+def _is_subquadratic(cfg) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def shape_config(cfg, shape: ShapeSpec, *, multi_pod: bool = False):
+    """Arch config adapted to the input shape + serving node count.
+
+    Returns (cfg, n_nodes, window, meta).
+    """
+    window: Any = "cfg"
+    meta: Dict[str, Any] = {}
+    n_nodes = cfg.n_nodes
+    if multi_pod and cfg.sharding_policy == "node_dp":
+        n_nodes = cfg.n_nodes * 2        # 32 DL nodes over 2 pods
+    if shape.name == "long_500k":
+        n_nodes = 1                      # one global long-context request
+        if not _is_subquadratic(cfg):
+            cfg = dataclasses.replace(cfg,
+                                      sliding_window=SLIDING_WINDOW_500K)
+            window = SLIDING_WINDOW_500K
+            meta["variant"] = f"sliding-window {SLIDING_WINDOW_500K} " \
+                              "(beyond-paper long-context variant)"
+        else:
+            meta["variant"] = "native sub-quadratic decode"
+    if shape.global_batch % n_nodes != 0:
+        # fall back to the largest node count dividing the batch
+        while shape.global_batch % n_nodes != 0:
+            n_nodes //= 2
+        n_nodes = max(n_nodes, 1)
+    return cfg, n_nodes, window, meta
+
+
+def _dec_len(cfg, seq_len: int) -> int:
+    """Decoder text length for train/prefill (whisper caps at 448;
+    VLMs reserve frontend token positions)."""
+    if cfg.encoder is not None:
+        return min(seq_len, cfg.max_position)
+    if cfg.frontend is not None:
+        return seq_len - cfg.frontend_tokens
+    return seq_len
+
+
+def input_specs(cfg, shape: ShapeSpec, n_nodes: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b = shape.global_batch // n_nodes
+    if shape.kind in ("train", "prefill"):
+        s = _dec_len(cfg, shape.seq_len)
+        specs = {"tokens": F((n_nodes, b, s), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = F((n_nodes, b, s), jnp.int32)
+        if cfg.encoder is not None:
+            specs["frames"] = F(
+                (n_nodes, b, cfg.encoder.seq_len, cfg.d_model), jnp.float32)
+        elif cfg.frontend == "vision":
+            specs["patch_embeds"] = F(
+                (n_nodes, b, cfg.frontend_tokens, _VISION_DIM), jnp.float32)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": F((n_nodes, b, 1), jnp.int32),
+            "pos": F((), jnp.int32)}
+
+
+def cache_len(cfg, shape: ShapeSpec, window) -> int:
+    """KV buffer length for decode shapes: ring of ``window`` slots for
+    windowed archs (production sizing), else the full context (whisper's
+    32k self-attn cache is a structural proof beyond its 448-position
+    spec — DESIGN.md §4)."""
+    if isinstance(window, int):
+        return window
+    return shape.seq_len

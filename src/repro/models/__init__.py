@@ -1,0 +1,7 @@
+"""Model zoo: shared layers, mixers (attention / Mamba / RWKV-6), MoE,
+the composable transformer stack, the paper's CNNs, and the arch-agnostic
+``model`` API used by the runtime and launcher."""
+from . import attention, cnn, layers, mamba, model, moe, rwkv, transformer
+
+__all__ = ["attention", "cnn", "layers", "mamba", "model", "moe", "rwkv",
+           "transformer"]

@@ -1,0 +1,89 @@
+"""Paper-faithful CNNs for the accuracy experiments (Table I / Fig. 3-7).
+
+The Morph paper trains small CNNs on CIFAR-10 / FEMNIST via DecentralizePy;
+the standard models there are GN-LeNet variants: two conv+groupnorm+pool
+stages followed by a classifier head.  Pure-functional JAX, pytree params —
+so the same model stacks on a node axis and flows through
+``repro.core`` mixing exactly like the large architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, shape, dtype=jnp.float32):
+    # shape = (h, w, c_in, c_out); He fan-in init
+    fan_in = shape[0] * shape[1] * shape[2]
+    std = math.sqrt(2.0 / fan_in)
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                       jnp.float32) * std
+
+
+def cnn_params(key, *, in_channels: int = 3, num_classes: int = 10,
+               image_size: int = 32, width: int = 32) -> Dict:
+    """GN-LeNet: conv5x5(w) -> GN -> pool -> conv5x5(2w) -> GN -> pool ->
+    fc(num_classes)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    w2 = 2 * width
+    feat = (image_size // 4) ** 2 * w2
+    return {
+        "conv1": {"w": _conv_init(k1, (5, 5, in_channels, width)),
+                  "b": jnp.zeros((width,))},
+        "gn1": {"scale": jnp.ones((width,)), "bias": jnp.zeros((width,))},
+        "conv2": {"w": _conv_init(k2, (5, 5, width, w2)),
+                  "b": jnp.zeros((w2,))},
+        "gn2": {"scale": jnp.ones((w2,)), "bias": jnp.zeros((w2,))},
+        "fc": {"w": jax.random.truncated_normal(
+            k3, -2.0, 2.0, (feat, num_classes), jnp.float32)
+            / math.sqrt(feat),
+            "b": jnp.zeros((num_classes,))},
+    }
+
+
+def _group_norm(p, x, groups: int = 2, eps: float = 1e-5):
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * p["scale"] + p["bias"]
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(p, images: jax.Array) -> jax.Array:
+    """images: [b, H, W, C] float -> logits [b, num_classes]."""
+    x = jax.nn.relu(_group_norm(p["gn1"], _conv(p["conv1"], images)))
+    x = _pool(x)
+    x = jax.nn.relu(_group_norm(p["gn2"], _conv(p["conv2"], x)))
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+def cnn_loss(p, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits = cnn_forward(p, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    loss = nll.mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def cnn_accuracy(p, images, labels) -> jax.Array:
+    return (cnn_forward(p, images).argmax(-1) == labels).mean()

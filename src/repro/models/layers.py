@@ -1,0 +1,144 @@
+"""Shared neural building blocks (pure-functional, pytree params).
+
+Initializers follow the conventions of the source models (truncated-normal
+embeddings, Lecun/ Xavier fan-in projections, zero-init residual outputs
+optional).  All compute paths accept a ``dtype`` so full configs run bf16
+while smoke tests run f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def _dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[0]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def dense_params(key, d_in: int, d_out: int, dtype, bias: bool = False,
+                 scale: float = 1.0):
+    kw, kb = jax.random.split(key)
+    p = {"w": _dense_init(kw, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, dtype=None):
+    y = x @ p["w"].astype(dtype or x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def norm_params(d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)               # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,s,hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]                  # [...,s,1,hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs: SwiGLU / GELU / squared-ReLU (Nemotron-4).
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, d_model: int, d_ff: int, mlp_type: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {"gate": dense_params(k1, d_model, d_ff, dtype),
+                "up": dense_params(k2, d_model, d_ff, dtype),
+                "down": dense_params(k3, d_ff, d_model, dtype)}
+    return {"up": dense_params(k1, d_model, d_ff, dtype),
+            "down": dense_params(k2, d_ff, d_model, dtype)}
+
+
+def apply_mlp(p, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(dense(p["up"], x))
+    elif mlp_type == "sqrelu":
+        h = jnp.square(jax.nn.relu(dense(p["up"], x)))
+    else:
+        raise ValueError(mlp_type)
+    return dense(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings.
+# ---------------------------------------------------------------------------
+
+def embed_params(key, vocab: int, d_model: int, dtype):
+    tbl = (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d_model),
+                                       jnp.float32) * 0.02).astype(dtype)
+    return {"table": tbl}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x, tied_table: Optional[jax.Array] = None):
+    table = tied_table if tied_table is not None else p["w"]
+    return (x.astype(jnp.float32)
+            @ table.astype(jnp.float32).T
+            if tied_table is not None
+            else x.astype(jnp.float32) @ table.astype(jnp.float32))
+
+
+def sinusoidal_positions(length: int, d_model: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((length, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe

@@ -1,0 +1,152 @@
+"""Mamba (S6) selective state-space mixer — the SSM half of Jamba.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel becomes a
+**chunked associative scan** — ``lax.associative_scan`` inside fixed-length
+chunks (parallel, MXU/VPU friendly, bounded VMEM working set) with a
+``lax.scan`` carrying the [batch, d_inner, d_state] hidden state across
+chunks.  Decode is the exact single-step recurrence on the carried state,
+giving O(1) per-token cost for the ``long_500k`` shape.
+
+State carried between tokens/chunks:
+  ``h``    [batch, d_inner, d_state]  SSM hidden state
+  ``conv`` [batch, d_conv-1, d_inner] causal-conv tail
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm.dt_rank or max(cfg.d_model // 16, 1)
+
+
+def mamba_params(key, cfg, dtype):
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    dtr = _dt_rank(cfg)
+    k_in, k_conv, k_x, k_dt, k_out = jax.random.split(key, 5)
+    # S4D-real initialization for A; dt bias so softplus(dt) spans
+    # [dt_min, dt_max] as in the reference implementation.
+    a = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+                 (di, 1))
+    dt = jnp.exp(jax.random.uniform(k_dt, (di,), jnp.float32)
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    inv_softplus = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": layers.dense_params(k_in, d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(k_conv, (s.d_conv, di), jnp.float32)
+                   / math.sqrt(s.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers.dense_params(k_x, di, dtr + 2 * s.d_state, dtype),
+        "dt_proj": {"w": layers._dense_init(
+            jax.random.fold_in(k_dt, 1), (dtr, di), dtype),
+            "b": inv_softplus.astype(dtype)},
+        "A_log": jnp.log(a),                       # f32 — numerics-critical
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_params(k_out, di, d, dtype),
+    }
+
+
+def _causal_conv(p, x, tail):
+    """Depthwise causal conv1d. x: [b, L, di]; tail: [b, d_conv-1, di]."""
+    dc = p["conv_w"].shape[0]
+    xt = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xt[:, i:i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+              for i in range(dc))
+    new_tail = xt[:, -(dc - 1):, :] if dc > 1 else tail
+    return out + p["conv_b"].astype(x.dtype), new_tail
+
+
+def _ssm_inputs(p, x, cfg):
+    """x: [b, L, di] -> (dA [b,L,di,ds], dBx [b,L,di,ds], C [b,L,ds])."""
+    s = cfg.ssm
+    dtr = _dt_rank(cfg)
+    proj = layers.dense(p["x_proj"], x)
+    dt, B, C = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(layers.dense(p["dt_proj"], dt)
+                         .astype(jnp.float32))          # [b,L,di]
+    A = -jnp.exp(p["A_log"])                            # [di, ds]
+    dA = jnp.exp(dt[..., None] * A[None, None])         # [b,L,di,ds]
+    dBx = (dt * x.astype(jnp.float32))[..., None] \
+        * B[..., None, :].astype(jnp.float32)           # [b,L,di,ds]
+    return dA, dBx, C.astype(jnp.float32)
+
+
+def _chunk_scan(h0, dA, dBx):
+    """Parallel in-chunk scan: returns (h_all [b,L,di,ds], h_last)."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+    a_cum, b_cum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = a_cum * h0[:, None] + b_cum
+    return h_all, h_all[:, -1]
+
+
+def apply_mamba(p, x, cfg) -> jax.Array:
+    """Training/prefill forward. x: [b, S, d_model] -> [b, S, d_model].
+
+    The [b, L, d_inner, d_state] discretized tensors (64x the activation
+    size at d_state=16) are built PER CHUNK inside the scan body, never
+    for the full sequence — this was the dominant HBM term of the hybrid
+    arch's roofline (EXPERIMENTS.md §Perf, jamba iteration 1).
+    """
+    s = cfg.ssm
+    b, S, _ = x.shape
+    di = s.expand * cfg.d_model
+    xz = layers.dense(p["in_proj"], x)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    tail0 = jnp.zeros((b, s.d_conv - 1, di), x.dtype)
+    xr, _ = _causal_conv(p, xr, tail0)
+    xr = jax.nn.silu(xr)
+
+    L = min(s.chunk, S)
+    if S % L != 0:
+        raise ValueError(f"seq {S} not divisible by ssm chunk {L}")
+    n_chunks = S // L
+    xr_c = xr.reshape(b, n_chunks, L, di).transpose(1, 0, 2, 3)
+
+    def step(h, xr_chunk):
+        da, dbx, c = _ssm_inputs(p, xr_chunk, cfg)   # chunk-local build
+        h_all, h_last = _chunk_scan(h, da, dbx)
+        y = jnp.einsum("blds,bls->bld", h_all, c)
+        return h_last, y
+
+    h0 = jnp.zeros((b, di, s.d_state), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xr_c)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, S, di)
+    y = y + p["D"][None, None] * xr.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return layers.dense(p["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) per token).
+# ---------------------------------------------------------------------------
+
+def init_mamba_state(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {"h": jnp.zeros((batch, di, s.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, s.d_conv - 1, di), dtype)}
+
+
+def decode_mamba(p, x, cfg, state) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [b, 1, d_model] -> (y [b,1,d_model], new_state)."""
+    xz = layers.dense(p["in_proj"], x)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xr, new_tail = _causal_conv(p, xr, state["conv"])
+    xr = jax.nn.silu(xr)
+    dA, dBx, C = _ssm_inputs(p, xr, cfg)
+    h = state["h"] * dA[:, 0] + dBx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, C[:, 0])[:, None]
+    y = y + p["D"][None, None] * xr.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return layers.dense(p["out_proj"], y), {"h": h, "conv": new_tail}

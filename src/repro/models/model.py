@@ -1,0 +1,106 @@
+"""Arch-agnostic model API consumed by the runtime, launcher and tests.
+
+Every architecture (selected by an :class:`~repro.configs.base.ArchConfig`)
+exposes the same five entry points:
+
+  ``init_params(key, cfg)``                         -> params pytree
+  ``forward(params, batch, cfg)``                   -> (logits, aux)
+  ``loss_fn(params, batch, cfg)``                   -> (loss, metrics)
+  ``init_cache(cfg, batch, max_len)``               -> decode cache
+  ``decode_step(params, cache, tokens, pos, cfg)``  -> (logits, cache)
+
+``batch`` keys: ``tokens`` [b, s] int32, ``labels`` [b, s] int32 (-100 =
+ignore); plus the stub-frontend inputs ``frames`` (audio enc-dec) or
+``patch_embeds`` (vlm early fusion) when the arch declares a frontend.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+
+IGNORE_INDEX = -100
+
+init_params = transformer.init_params
+init_cache = transformer.init_cache
+decode_step = transformer.decode_step
+
+
+def forward(params, batch, cfg, *, window="cfg", last_only=False):
+    return transformer.forward(params, batch, cfg, window=window,
+                               last_only=last_only)
+
+
+def loss_fn(params, batch, cfg, *, window="cfg"
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ MoE aux), ignoring masked labels.
+
+    The label logit is extracted with an ``iota == label`` masked
+    reduction rather than ``take_along_axis``: a gather along the
+    vocab axis cannot be partitioned when the vocab is model-sharded
+    (XLA would replicate the full [b, s, V] logits), while the masked
+    reduction stays local per shard + one scalar all-reduce.
+    """
+    logits, aux = transformer.forward(params, batch, cfg, window=window)
+    labels = batch["labels"]
+    # Stub-frontend tokens are prepended to the text: pad the label stream
+    # with IGNORE so positions line up.
+    pad = logits.shape[1] - labels.shape[1]
+    if pad > 0:
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], pad), IGNORE_INDEX, labels.dtype),
+             labels], axis=1)
+    mask = labels != IGNORE_INDEX
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)                  # [b, s]
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=safe.dtype)
+    onehot = (vocab_iota[None, None, :] == safe[..., None])
+    label_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - label_logit
+    denom = jnp.maximum(mask.sum(), 1)
+    ce = jnp.where(mask, nll, 0.0).sum() / denom
+    loss = ce + aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux,
+               "accuracy": (jnp.where(mask, logits.argmax(-1) == safe,
+                                      False).sum() / denom)}
+    return loss, metrics
+
+
+def greedy_generate(params, cfg, prompt: jax.Array, steps: int,
+                    max_len: Optional[int] = None) -> jax.Array:
+    """Tiny greedy decoder used by examples/tests (not the serving path)."""
+    b, plen = prompt.shape
+    max_len = max_len or (plen + steps)
+    cache = init_cache(cfg, b, max_len, cfg.param_dtype)
+
+    def prefill_step(carry, t):
+        cache, _ = carry
+        tok = jax.lax.dynamic_slice_in_dim(prompt, t, 1, axis=1)
+        logits, cache = decode_step(params, cache, tok, t, cfg)
+        return (cache, logits), None
+
+    (cache, logits), _ = jax.lax.scan(
+        prefill_step, (cache, jnp.zeros((b, 1, cfg.vocab_size))),
+        jnp.arange(plen))
+
+    def gen_step(carry, t):
+        cache, last = carry
+        tok = last.argmax(-1).astype(jnp.int32)
+        logits, cache = decode_step(params, cache, tok, plen + t, cfg)
+        return (cache, logits), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(gen_step, (cache, logits),
+                                jnp.arange(steps))
+    return toks.T                                           # [b, steps]
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(int(x.size * x.dtype.itemsize)
+               for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,254 @@
+"""RWKV-6 ("Finch") attention-free mixer with data-dependent decay.
+
+TPU adaptation (DESIGN.md §2): the reference CUDA WKV6 kernel is a
+token-sequential recurrence over a per-head [head_dim, head_dim] state.
+We replace it with the **chunked linear-attention form**: within a chunk
+of ``cfg.ssm.chunk`` tokens the pairwise decay products are materialized
+as a masked [L, L] interaction (MXU-friendly einsums, all ratios <= 1 so
+no log-space overflow), while a ``lax.scan`` carries the state across
+chunks.  Decode is the exact one-step recurrence (O(1) per token), which
+is what makes the ``long_500k`` shape native for this arch.
+
+Recurrence (per head, state S in R^{hd x hd}):
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,     w_t = exp(-exp(wraw_t))
+
+with r/k/v/g/w all produced from data-dependent token-shift interpolation
+(the "ddlerp" that distinguishes v6 from v5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+_DECAY_LORA = 64
+_MIX_LORA = 32
+_MIX_KINDS = 5          # r, k, v, g, w
+
+
+def rwkv_params(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.num_heads if cfg.num_heads > 0 else d // cfg.ssm.head_dim
+    hd = d // h
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift ddlerp: base mus + low-rank data-dependent correction
+        "mu_base": jnp.zeros((d,), dtype),
+        "mu": jnp.zeros((_MIX_KINDS, d), dtype),
+        "mix_a": layers._dense_init(ks[0], (d, _MIX_KINDS * _MIX_LORA),
+                                    dtype),
+        "mix_b": (jax.random.normal(ks[1], (_MIX_KINDS, _MIX_LORA, d),
+                                    jnp.float32) * 0.01).astype(dtype),
+        # projections
+        "r": layers.dense_params(ks[2], d, d, dtype),
+        "k": layers.dense_params(ks[3], d, d, dtype),
+        "v": layers.dense_params(ks[4], d, d, dtype),
+        "g": layers.dense_params(ks[5], d, d, dtype),
+        "o": layers.dense_params(ks[6], d, d, dtype),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(xw @ w1) @ w2))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w1": layers._dense_init(ks[7], (d, _DECAY_LORA), dtype),
+        "w2": (jax.random.normal(ks[8], (_DECAY_LORA, d), jnp.float32)
+               * 0.01).astype(dtype),
+        # per-channel current-token bonus
+        "u": (jax.random.normal(ks[9], (d,), jnp.float32) * 0.1),
+        # post-WKV group norm (per head)
+        "ln_x": {"scale": jnp.ones((d,), dtype),
+                 "bias": jnp.zeros((d,), dtype)},
+    }
+    return p
+
+
+def channel_mix_params(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dtype),
+        "mu_r": jnp.zeros((d,), dtype),
+        "k": layers.dense_params(k1, d, ff, dtype),
+        "v": layers.dense_params(k2, ff, d, dtype),
+        "r": layers.dense_params(k3, d, d, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """Previous token per position; ``last`` [b, 1, d] carries state."""
+    return jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent interpolation producing the 5 mixed inputs."""
+    dx = x_prev - x
+    base = x + dx * p["mu_base"].astype(x.dtype)
+    lora = jnp.tanh(base @ p["mix_a"].astype(x.dtype))
+    b, s, _ = x.shape
+    lora = lora.reshape(b, s, _MIX_KINDS, _MIX_LORA)
+    corr = jnp.einsum("bskr,krd->bskd", lora, p["mix_b"].astype(x.dtype))
+    mix = p["mu"].astype(x.dtype)[None, None] + corr        # [b,s,5,d]
+    return x[:, :, None] + dx[:, :, None] * mix             # [b,s,5,d]
+
+
+def _rkvgw(p, x, x_prev, cfg):
+    mixed = _ddlerp(p, x, x_prev)
+    xr, xk, xv, xg, xw = [mixed[:, :, i] for i in range(_MIX_KINDS)]
+    r = layers.dense(p["r"], xr)
+    k = layers.dense(p["k"], xk)
+    v = layers.dense(p["v"], xv)
+    g = jax.nn.silu(layers.dense(p["g"], xg))
+    wraw = (p["w0"][None, None]
+            + jnp.tanh(xw @ p["w1"].astype(x.dtype)).astype(jnp.float32)
+            @ p["w2"].astype(jnp.float32))
+    log_w = -jnp.exp(wraw)                                  # log decay < 0
+    return r, k, v, g, log_w
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h)
+
+
+def _group_norm(p, x, h, eps=1e-5):
+    """Per-head layer norm over head_dim (RWKV's ln_x)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, h, d // h).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(b, s, d)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _chunk_wkv(r, k, v, log_w, u, s0):
+    """One chunk of the WKV recurrence, parallel within the chunk.
+
+    r/k/v: [b, L, h, hd]; log_w: [b, L, h, hd]; u: [h, hd];
+    s0: [b, h, hd, hd] (key dim x value dim).  Returns (y, s_final).
+    All math in f32.
+    """
+    f32 = jnp.float32
+    r, k, v, log_w = (t.astype(f32) for t in (r, k, v, log_w))
+    L = r.shape[1]
+    cum = jnp.cumsum(log_w, axis=1)                 # inclusive [b,L,h,hd]
+    ecum = cum - log_w                              # exclusive
+    # inter-chunk: y_t += (r_t * prod_{s<t} w_s)^T S0
+    q = r * jnp.exp(ecum)
+    y_inter = jnp.einsum("blhk,bhkv->blhv", q, s0)
+    # intra-chunk: A[t,s] = sum_d r_td k_sd exp(ecum_t - cum_s), s < t
+    #              diag:   (r_t * u * k_t) . v_t
+    diff = ecum[:, :, None] - cum[:, None, :]       # [b, t, s, h, hd]
+    mask = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])
+    decay = jnp.exp(jnp.minimum(diff, 0.0)) * mask[None, :, :, None, None]
+    A = jnp.einsum("bthk,bshk,btshk->bths", r, k, decay)
+    y_intra = jnp.einsum("bths,bshv->bthv", A, v)
+    bonus = jnp.einsum("blhk,hk,blhk->blh", r, u.astype(f32), k)
+    y = y_inter + y_intra + bonus[..., None] * v
+    # state update: S_L = diag(P_L) S0 + sum_s diag(P_L/P_s) k_s v_s^T
+    p_total = jnp.exp(cum[:, -1])                   # [b,h,hd]
+    k_scaled = k * jnp.exp(jnp.minimum(cum[:, -1:] - cum, 0.0))
+    s_new = (p_total[..., None] * s0
+             + jnp.einsum("blhk,blhv->bhkv", k_scaled, v))
+    return y, s_new
+
+
+def apply_rwkv_time_mix(p, x, cfg, *, last_token=None, state=None
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Training/prefill forward. x: [b, S, d] -> (y, final_state)."""
+    b, S, d = x.shape
+    h = cfg.num_heads if cfg.num_heads > 0 else d // cfg.ssm.head_dim
+    hd = d // h
+    if last_token is None:
+        last_token = jnp.zeros((b, 1, d), x.dtype)
+    x_prev = _token_shift(x, last_token)
+    r, k, v, g, log_w = _rkvgw(p, x, x_prev, cfg)
+    r, k, v = _heads(r, h), _heads(k, h), _heads(v, h)
+    log_w = _heads(log_w, h)
+    u = p["u"].reshape(h, hd)
+
+    L = min(cfg.ssm.chunk, S)
+    if S % L != 0:
+        raise ValueError(f"seq {S} not divisible by rwkv chunk {L}")
+    n_chunks = S // L
+    resh = lambda t: t.reshape((b, n_chunks, L) + t.shape[2:])
+    rc, kc, vc, wc = map(resh, (r, k, v, log_w))
+
+    def step(s, inputs):
+        rr, kk, vv, ww = inputs
+        y, s_new = _chunk_wkv(rr, kk, vv, ww, u, s)
+        return s_new, y
+
+    s0 = (state["s"] if state is not None
+          else jnp.zeros((b, h, hd, hd), jnp.float32))
+    s_fin, ys = jax.lax.scan(
+        step, s0, tuple(t.transpose(1, 0, 2, 3, 4) for t in
+                        (rc, kc, vc, wc)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, S, d)
+    y = _group_norm(p["ln_x"], y.astype(x.dtype), h)
+    y = y * g
+    out = layers.dense(p["o"], y)
+    new_state = {"s": s_fin, "last": x[:, -1:, :]}
+    return out, new_state
+
+
+def apply_channel_mix(p, x, *, last_token=None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    b, S, d = x.shape
+    if last_token is None:
+        last_token = jnp.zeros((b, 1, d), x.dtype)
+    x_prev = _token_shift(x, last_token)
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(layers.dense(p["k"], xk)))
+    out = jax.nn.sigmoid(layers.dense(p["r"], xr)) * layers.dense(p["v"], kk)
+    return out, x[:, -1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Decode (exact recurrence, O(1) per token).
+# ---------------------------------------------------------------------------
+
+def init_rwkv_state(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    h = cfg.num_heads if cfg.num_heads > 0 else d // cfg.ssm.head_dim
+    hd = d // h
+    return {
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "last_tm": jnp.zeros((batch, 1, d), dtype),
+        "last_cm": jnp.zeros((batch, 1, d), dtype),
+    }
+
+
+def decode_rwkv_time_mix(p, x, cfg, state
+                         ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [b, 1, d] -> (y, new_state); exact single-step recurrence."""
+    b, _, d = x.shape
+    h = cfg.num_heads if cfg.num_heads > 0 else d // cfg.ssm.head_dim
+    hd = d // h
+    x_prev = state["last_tm"].astype(x.dtype)
+    r, k, v, g, log_w = _rkvgw(p, x, x_prev, cfg)
+    f32 = jnp.float32
+    rh = r.reshape(b, h, hd).astype(f32)
+    kh = k.reshape(b, h, hd).astype(f32)
+    vh = v.reshape(b, h, hd).astype(f32)
+    wh = jnp.exp(log_w.reshape(b, h, hd))
+    u = p["u"].reshape(h, hd).astype(f32)
+    s = state["s"]
+    kv = kh[..., :, None] * vh[..., None, :]              # [b,h,hd,hd]
+    y = jnp.einsum("bhk,bhkv->bhv", rh, s + u[None, :, :, None] * kv)
+    s_new = wh[..., None] * s + kv
+    y = y.reshape(b, 1, d)
+    y = _group_norm(p["ln_x"], y.astype(x.dtype), h) * g
+    return layers.dense(p["o"], y), {"s": s_new, "last_tm": x}
+
+
+def decode_channel_mix(p, x, state_last
+                       ) -> Tuple[jax.Array, jax.Array]:
+    out, new_last = apply_channel_mix(p, x, last_token=state_last)
+    return out, new_last

@@ -1,0 +1,364 @@
+"""Architecture-agnostic transformer stack.
+
+A model is ``prefix blocks + (pattern blocks x num_periods) + head``.  The
+repeating body is **scanned over periods** (params stacked on a leading
+period axis), which keeps compile time flat in depth and gives the
+classic per-layer remat point.  Each :class:`~repro.configs.base.BlockSpec`
+selects its mixer (attn / mamba / rwkv) and dense-vs-MoE MLP, so the same
+machinery instantiates dense llamas, DeepSeek-style MoEs, Jamba hybrids,
+RWKV, Whisper's encoder-decoder and the VLM/audio stub-frontend variants.
+
+Parameter layout::
+
+  {"embed": ...,
+   "frontend_proj": ...,            # stub modality projector (audio/vlm)
+   "pos_embed": ...,                # learned positions (rope_theta=None)
+   "prefix": (block, ...),          # non-repeating leading blocks
+   "body": (block_stacked, ...),    # one entry per pattern position,
+                                    # each leaf stacked [num_periods, ...]
+   "encoder": {...},                # whisper only
+   "final_norm": ..., "lm_head": ...}
+
+Caches mirror the layout (prefix tuple + body tuple with leaves stacked
+on the period axis) so decode scans over the same structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, mamba, moe, rwkv
+
+
+# ---------------------------------------------------------------------------
+# Single block.
+# ---------------------------------------------------------------------------
+
+def block_params(key, cfg, spec, dtype, cross: bool = False):
+    kn1, kmix, kn2, kmlp, kx, knx = jax.random.split(key, 6)
+    p: Dict[str, Any] = {
+        "norm1": layers.norm_params(cfg.d_model, cfg.norm_type, dtype),
+        "norm2": layers.norm_params(cfg.d_model, cfg.norm_type, dtype),
+    }
+    if spec.mixer == "attn":
+        p["mixer"] = attention.attn_params(kmix, cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba.mamba_params(kmix, cfg, dtype)
+    elif spec.mixer == "rwkv":
+        p["mixer"] = rwkv.rwkv_params(kmix, cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.mixer == "rwkv":
+        p["mlp"] = rwkv.channel_mix_params(kmlp, cfg, dtype)
+    elif spec.moe:
+        p["mlp"] = moe.moe_params(kmlp, cfg, dtype)
+    else:
+        p["mlp"] = layers.mlp_params(kmlp, cfg.d_model, cfg.d_ff,
+                                     cfg.mlp_type, dtype)
+    if cross:
+        p["cross"] = attention.attn_params(kx, cfg, dtype, cross=True)
+        p["norm_cross"] = layers.norm_params(cfg.d_model, cfg.norm_type,
+                                             dtype)
+    return p
+
+
+def apply_block(p, x, cfg, spec, *, positions, causal=True,
+                window=None, memory=None):
+    """Training/prefill forward through one block. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(p["norm1"], x, cfg.norm_type)
+    if spec.mixer == "attn":
+        mixed = attention.self_attention(p["mixer"], h, cfg,
+                                         positions=positions,
+                                         causal=causal, window=window)
+    elif spec.mixer == "mamba":
+        mixed = mamba.apply_mamba(p["mixer"], h, cfg)
+    else:  # rwkv
+        mixed, _ = rwkv.apply_rwkv_time_mix(p["mixer"], h, cfg)
+    x = x + mixed
+    if "cross" in p and memory is not None:
+        hx = layers.apply_norm(p["norm_cross"], x, cfg.norm_type)
+        x = x + attention.cross_attention(p["cross"], hx, memory, cfg)
+    h2 = layers.apply_norm(p["norm2"], x, cfg.norm_type)
+    if spec.mixer == "rwkv":
+        out, _ = rwkv.apply_channel_mix(p["mlp"], h2)
+    elif spec.moe:
+        out, aux = moe.apply_moe(p["mlp"], h2, cfg)
+    else:
+        out = layers.apply_mlp(p["mlp"], h2, cfg.mlp_type)
+    return x + out, aux
+
+
+# ---------------------------------------------------------------------------
+# Block decode (one token, functional cache).
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg, spec, batch: int, max_len: int, dtype,
+                     cross_len: int = 0):
+    c: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        c["attn"] = attention.init_cache(cfg, batch, max_len, dtype)
+    elif spec.mixer == "mamba":
+        c["ssm"] = mamba.init_mamba_state(cfg, batch, dtype)
+    else:
+        c["wkv"] = rwkv.init_rwkv_state(cfg, batch, dtype)
+    if cross_len:
+        shape = (batch, cross_len, cfg.num_kv_heads, cfg.head_dim)
+        c["cross_k"] = jnp.zeros(shape, dtype)
+        c["cross_v"] = jnp.zeros(shape, dtype)
+    return c
+
+
+def _decode_cross(p, x, cfg, cache):
+    """Cross-attention against precomputed (cached) encoder K/V."""
+    b = x.shape[0]
+    groups = cfg.num_heads // cfg.num_kv_heads
+    q = layers.dense(p["q"], x).reshape(b, 1, cfg.num_heads, cfg.head_dim)
+    k = attention._repeat_kv(cache["cross_k"], groups)
+    v = attention._repeat_kv(cache["cross_v"], groups)
+    mask = jnp.ones((1, 1, 1, k.shape[1]), bool)
+    out = attention._sdpa(q, k, v, mask, cfg.head_dim)
+    return layers.dense(p["o"], out.reshape(b, 1, -1))
+
+
+def decode_block(p, x, cfg, spec, cache, pos, *, window=None,
+                 kv_spec=None):
+    """One-token decode through one block. Returns (x, new_cache)."""
+    new_cache = dict(cache)
+    h = layers.apply_norm(p["norm1"], x, cfg.norm_type)
+    if spec.mixer == "attn":
+        mixed, new_cache["attn"] = attention.decode_self_attention(
+            p["mixer"], h, cfg, cache["attn"], pos, window=window,
+            kv_spec=kv_spec)
+    elif spec.mixer == "mamba":
+        mixed, new_cache["ssm"] = mamba.decode_mamba(
+            p["mixer"], h, cfg, cache["ssm"])
+    else:
+        wkv_state = {"s": cache["wkv"]["s"],
+                     "last_tm": cache["wkv"]["last_tm"]}
+        mixed, ns = rwkv.decode_rwkv_time_mix(p["mixer"], h, cfg, wkv_state)
+        new_cache["wkv"] = {**cache["wkv"], **ns}
+    x = x + mixed
+    if "cross" in p:
+        hx = layers.apply_norm(p["norm_cross"], x, cfg.norm_type)
+        x = x + _decode_cross(p["cross"], hx, cfg, cache)
+    h2 = layers.apply_norm(p["norm2"], x, cfg.norm_type)
+    if spec.mixer == "rwkv":
+        out, new_last = rwkv.decode_channel_mix(
+            p["mlp"], h2, new_cache["wkv"]["last_cm"])
+        new_cache["wkv"] = {**new_cache["wkv"], "last_cm": new_last}
+    elif spec.moe:
+        out, _ = moe.apply_moe(p["mlp"], h2, cfg)
+    else:
+        out = layers.apply_mlp(p["mlp"], h2, cfg.mlp_type)
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full stack.
+# ---------------------------------------------------------------------------
+
+_FRONTEND_DIM = {"audio": 384, "vision": 1024}
+
+
+def init_params(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": layers.embed_params(keys[0], cfg.vocab_size, cfg.d_model,
+                                     dtype),
+        "final_norm": layers.norm_params(cfg.d_model, cfg.norm_type, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_params(keys[1], cfg.d_model,
+                                           cfg.vocab_size, dtype)
+    if cfg.learned_pos:
+        p["pos_embed"] = (jax.random.normal(
+            keys[2], (cfg.max_position_embed(), cfg.d_model), jnp.float32)
+            * 0.02).astype(dtype)
+    if cfg.frontend is not None:
+        d_in = _FRONTEND_DIM[cfg.frontend]
+        if cfg.name.startswith("whisper") or d_in == cfg.d_model:
+            d_in = cfg.d_model          # whisper stub emits d_model frames
+        p["frontend_proj"] = layers.dense_params(keys[3], d_in, cfg.d_model,
+                                                 dtype, bias=True)
+    cross = cfg.encoder is not None
+    if cfg.prefix:
+        pk = jax.random.split(keys[4], len(cfg.prefix))
+        p["prefix"] = tuple(
+            block_params(pk[i], cfg, s, dtype, cross=cross)
+            for i, s in enumerate(cfg.prefix))
+    body = []
+    pat_keys = jax.random.split(keys[5], len(cfg.pattern))
+    for i, spec in enumerate(cfg.pattern):
+        per_keys = jax.random.split(pat_keys[i], cfg.num_periods)
+        body.append(jax.vmap(
+            lambda k, s=spec: block_params(k, cfg, s, dtype, cross=cross)
+        )(per_keys))
+    p["body"] = tuple(body)
+    if cfg.encoder is not None:
+        ek = jax.random.split(keys[6], cfg.encoder.num_layers + 2)
+        from ..configs.base import BlockSpec
+        enc_spec = BlockSpec(mixer="attn", moe=False)
+        p["encoder"] = {
+            "blocks": tuple(block_params(ek[i], cfg, enc_spec, dtype)
+                            for i in range(cfg.encoder.num_layers)),
+            "pos": (jax.random.normal(
+                ek[-2], (cfg.encoder.seq_len, cfg.d_model), jnp.float32)
+                * 0.02).astype(dtype),
+            "final_norm": layers.norm_params(cfg.d_model, cfg.norm_type,
+                                             dtype),
+        }
+    return p
+
+
+def _encode(p, frames, cfg):
+    """Whisper-style encoder over stub frame embeddings [b, T, d]."""
+    if "frontend_proj" in p:
+        frames = layers.dense(p["frontend_proj"], frames)
+    x = frames + p["encoder"]["pos"][None, :frames.shape[1]].astype(
+        frames.dtype)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    from ..configs.base import BlockSpec
+    spec = BlockSpec(mixer="attn", moe=False)
+    for blk in p["encoder"]["blocks"]:
+        x, _ = apply_block(blk, x, cfg, spec, positions=positions,
+                           causal=False)
+    return layers.apply_norm(p["encoder"]["final_norm"], x, cfg.norm_type)
+
+
+def _embed_inputs(p, batch, cfg):
+    """Token (+ stub frontend) embedding. Returns (x, positions)."""
+    tokens = batch["tokens"]
+    x = layers.embed(p["embed"], tokens)
+    if cfg.frontend is not None and cfg.encoder is None \
+            and "patch_embeds" in batch:
+        patches = layers.dense(p["frontend_proj"], batch["patch_embeds"])
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if cfg.learned_pos:
+        x = x + p["pos_embed"][None, :s].astype(x.dtype)
+    return x, positions
+
+
+def forward(p, batch, cfg, *, window="cfg", last_only: bool = False):
+    """Full forward -> (logits [b, S, vocab], aux_loss scalar).
+
+    ``window``: attention window; the sentinel "cfg" uses
+    ``cfg.sliding_window`` (None = full attention).
+    ``last_only``: emit logits for the final position only (the serving
+    prefill contract — avoids materializing [b, S, vocab] at 32k).
+    """
+    if window == "cfg":
+        window = cfg.sliding_window
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    memory = None
+    if cfg.encoder is not None:
+        memory = _encode(p, batch["frames"].astype(cdtype), cfg)
+    x, positions = _embed_inputs(p, batch, cfg)
+    x = x.astype(cdtype)
+    aux = jnp.zeros((), jnp.float32)
+
+    for blk, spec in zip(p.get("prefix", ()), cfg.prefix):
+        x, a = apply_block(blk, x, cfg, spec, positions=positions,
+                           window=window, memory=memory)
+        aux += a
+
+    def period_fn(x, period_params):
+        a_sum = jnp.zeros((), jnp.float32)
+        for blk, spec in zip(period_params, cfg.pattern):
+            x, a = apply_block(blk, x, cfg, spec, positions=positions,
+                               window=window, memory=memory)
+            a_sum += a
+        return x, a_sum
+
+    if cfg.remat:
+        period_fn = jax.checkpoint(period_fn)
+    if cfg.num_periods > 0:
+        x, auxes = jax.lax.scan(lambda c, pp: period_fn(c, pp), x, p["body"])
+        aux += auxes.sum()
+    if last_only:
+        x = x[:, -1:]
+    x = layers.apply_norm(p["final_norm"], x, cfg.norm_type)
+    logits = _lm_logits(p, x, cfg)
+    return logits, aux
+
+
+def _lm_logits(p, x, cfg):
+    """bf16 MXU matmul with f32 accumulation (an f32 x f32 matmul would
+    run at 1/8 MXU rate; accumulate-high keeps the numerics)."""
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        table = p["embed"]["table"].astype(cdtype)
+        return jax.lax.dot_general(
+            x.astype(cdtype), table,
+            (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return jax.lax.dot_general(
+        x.astype(cdtype), p["lm_head"]["w"].astype(cdtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode path.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.param_dtype)
+    cross_len = cfg.encoder.seq_len if cfg.encoder is not None else 0
+    prefix = tuple(init_block_cache(cfg, s, batch, max_len, dtype, cross_len)
+                   for s in cfg.prefix)
+    body = []
+    for spec in cfg.pattern:
+        one = init_block_cache(cfg, spec, batch, max_len, dtype, cross_len)
+        body.append(jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(
+                leaf[None], (cfg.num_periods,) + leaf.shape), one))
+    return {"prefix": prefix, "body": tuple(body)}
+
+
+def decode_step(p, cache, tokens, pos, cfg, *, window="cfg",
+                kv_spec=None):
+    """One-token decode. tokens: [b, 1] int32; pos: scalar int32.
+
+    Returns (logits [b, 1, vocab], new_cache).  ``kv_spec`` optionally
+    pins KV-cache shardings (see attention.decode_self_attention).
+    """
+    if window == "cfg":
+        window = cfg.sliding_window
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    x = layers.embed(p["embed"], tokens).astype(cdtype)
+    if cfg.learned_pos:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            p["pos_embed"], pos, 1, axis=0)[None].astype(x.dtype)
+
+    new_prefix = []
+    for blk, spec, c in zip(p.get("prefix", ()), cfg.prefix,
+                            cache["prefix"]):
+        x, nc = decode_block(blk, x, cfg, spec, c, pos, window=window,
+                             kv_spec=kv_spec)
+        new_prefix.append(nc)
+
+    def period_fn(x, scanned):
+        period_params, period_cache = scanned
+        new_caches = []
+        for blk, spec, c in zip(period_params, cfg.pattern, period_cache):
+            x, nc = decode_block(blk, x, cfg, spec, c, pos, window=window,
+                                 kv_spec=kv_spec)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if cfg.num_periods > 0:
+        x, new_body = jax.lax.scan(period_fn, x,
+                                   (p["body"], cache["body"]))
+    else:
+        new_body = cache["body"]
+    x = layers.apply_norm(p["final_norm"], x, cfg.norm_type)
+    logits = _lm_logits(p, x, cfg)
+    return logits, {"prefix": tuple(new_prefix), "body": new_body}

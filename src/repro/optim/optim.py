@@ -1,0 +1,116 @@
+"""SGD(+momentum) and AdamW as pure pytree transforms.
+
+The paper's D-PSGD uses plain SGD (Alg. 1/2: ``x - gamma * grad``); AdamW
+is provided for the large-arch training driver.  Optimizer states are
+pytrees with the same structure as params, so they stack on the node axis
+and shard exactly like params (each DL node owns an optimizer state).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]       # (grads, state, params) -> (upd, state)
+
+
+def _lr_at(lr: ScalarOrSchedule, count: jax.Array) -> jax.Array:
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def sgd(lr: ScalarOrSchedule, momentum: float = 0.0,
+        weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        state = {"count": jnp.zeros((), jnp.int32)}
+        if momentum > 0:
+            state["mu"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return state
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        step = _lr_at(lr, count)
+        g32 = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        if weight_decay > 0 and params is not None:
+            g32 = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(jnp.float32),
+                g32, params)
+        new_state = {"count": count}
+        if momentum > 0:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mu"], g32)
+            new_state["mu"] = mu
+            g32 = (jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, mu, g32)
+                if nesterov else mu)
+        upd = jax.tree_util.tree_map(lambda g: -step * g, g32)
+        return upd, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"count": jnp.zeros((), jnp.int32), "m": zeros(),
+                "v": zeros()}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        step = _lr_at(lr, count)
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+            state["v"], g32)
+        c = count.astype(jnp.float32)
+        mh_scale = 1.0 / (1 - b1 ** c)
+        vh_scale = 1.0 / (1 - b2 ** c)
+
+        def one(m_, v_, p):
+            upd = (m_ * mh_scale) / (jnp.sqrt(v_ * vh_scale) + eps)
+            if weight_decay > 0 and p is not None:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return -step * upd
+
+        if params is None:
+            upd = jax.tree_util.tree_map(lambda m_, v_: one(m_, v_, None),
+                                         m, v)
+        else:
+            upd = jax.tree_util.tree_map(one, m, v, params)
+        return upd, {"count": count, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def chain_clip(inner: Optimizer, max_norm: float) -> Optimizer:
+    """Global-norm gradient clipping wrapped around ``inner``."""
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+        clipped = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+        return inner.update(clipped, state, params)
+    return Optimizer(inner.init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

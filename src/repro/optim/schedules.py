@@ -1,0 +1,27 @@
+"""Learning-rate schedules (step-indexed, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(peak: float, total_steps: int, floor: float = 0.0):
+    def fn(count):
+        frac = jnp.clip(count.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return fn
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total_steps: int,
+                         floor: float = 0.0):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / jnp.maximum(warmup, 1)
+        frac = jnp.clip((c - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(c < warmup, warm, cos)
+    return fn

@@ -1,0 +1,93 @@
+"""Attention-layer tests: flash-vs-naive, GQA, RoPE, cache decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import layers
+
+
+def _qkv(b=2, s=2048, h=4, hd=32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, hd)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("window", [None, 512])
+def test_flash_matches_naive(window):
+    q, k, v, pos = _qkv()
+    mask = A.causal_mask(pos, pos, window)[:, None]
+    ref = A._sdpa(q, k, v, mask, q.shape[-1])
+    got = A._flash_attention(q, k, v, pos, pos, window, q.shape[-1])
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               atol=2e-5)
+
+
+def test_flash_odd_chunking():
+    q, k, v, pos = _qkv(s=3072)
+    ref = A._sdpa(q, k, v, A.causal_mask(pos, pos, None)[:, None],
+                  q.shape[-1])
+    got = A._flash_attention(q, k, v, pos, pos, None, q.shape[-1],
+                             q_chunk=512, kv_chunk=768)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               atol=2e-5)
+
+
+def test_rope_relative_property():
+    """RoPE: <q_m, k_n> depends only on m - n."""
+    hd = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    def score(m, n):
+        qm = layers.apply_rope(q, jnp.array([[m]]), 10000.0)
+        kn = layers.apply_rope(k, jnp.array([[n]]), 10000.0)
+        return float(jnp.vdot(qm, kn))
+    assert score(5, 3) == pytest.approx(score(12, 10), abs=1e-4)
+    assert score(5, 3) != pytest.approx(score(5, 4), abs=1e-3)
+
+
+def test_gqa_head_repeat():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 2, 8))
+    r = A._repeat_kv(x, 3)
+    assert r.shape == (2, 4, 6, 8)
+    np.testing.assert_array_equal(np.asarray(r[:, :, 0]),
+                                  np.asarray(r[:, :, 1]))
+
+
+class _Cfg:
+    d_model = 64
+    num_heads = 4
+    num_kv_heads = 2
+    head_dim = 16
+    rope_theta = 10000.0
+    qkv_bias = False
+
+
+def test_decode_cache_matches_full_attention():
+    cfg = _Cfg()
+    p = A.attn_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full = A.self_attention(p, x, cfg, positions=pos)
+    cache = A.init_cache(cfg, b, s, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = A.decode_self_attention(p, x[:, t:t + 1], cfg, cache,
+                                           jnp.int32(t))
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               atol=1e-4)
+
+
+def test_sliding_window_mask():
+    pos = jnp.arange(10)[None]
+    m = A.causal_mask(pos, pos, window=3)[0]
+    assert bool(m[5, 5]) and bool(m[5, 3])
+    assert not bool(m[5, 2])                 # outside window
+    assert not bool(m[5, 6])                 # future

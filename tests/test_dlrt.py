@@ -1,0 +1,141 @@
+"""Runtime + distribution tests: sharding specs (on an abstract 16x16
+mesh — no devices needed), train-step semantics, metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+import repro.configs as C
+from repro.core import EpidemicStrategy, StaticStrategy
+from repro.data import (StackedBatcher, dirichlet_partition,
+                        make_image_classification, train_test_split)
+from repro.dlrt import (DecentralizedRunner, MorphHParams, RunnerConfig,
+                        internode_variance, init_train_state, leaf_spec,
+                        make_train_step)
+from repro.dlrt.distributed import cache_spec, serve_kv_spec
+from repro.models.cnn import cnn_loss, cnn_params
+from repro.optim import sgd
+
+MESH1 = AbstractMesh((16, 16), ("data", "model"))
+MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _spec(shape, policy, mesh=MESH1, periods=9, names=()):
+    path = tuple(jax.tree_util.DictKey(n) for n in names)
+    return tuple(leaf_spec(path, shape, policy=policy, mesh=mesh,
+                           num_periods=periods, n_nodes=shape[0]))
+
+
+def test_node_dp_specs():
+    # dense weight [n, P, d, ff]: node axis -> data, ff -> model
+    assert _spec((16, 9, 512, 2048), "node_dp") == \
+        ("data", None, None, "model")
+    # norm scale [n, P, d]
+    assert _spec((16, 9, 512), "node_dp") == ("data", None, "model")
+    # embed [n, V, d] (no period axis): d -> model
+    assert _spec((16, 102400, 2048), "node_dp", periods=28) == \
+        ("data", None, "model")
+    # bias [n, P, ff]
+    assert _spec((16, 9, 2048), "node_dp") == ("data", None, "model")
+
+
+def test_node_dp_multipod_uses_both_axes():
+    assert _spec((32, 9, 512, 2048), "node_dp", mesh=MESH2)[0] == \
+        ("pod", "data")
+
+
+def test_expert_banks_get_expert_parallelism():
+    # MoE bank [n, P, E, d, ff] with path ending in 'up'
+    sp = _spec((16, 27, 64, 2048, 1408), "node_dp", periods=27,
+               names=("body", "mlp", "up"))
+    assert sp[2] == "model"                  # expert axis sharded
+
+
+def test_node_fsdp_two_axes():
+    sp = _spec((2, 9, 8192, 24576), "node_fsdp")
+    assert sp == (None, None, "data", "model")
+    # multi-pod: node axis over pod
+    sp2 = _spec((2, 9, 8192, 24576), "node_fsdp", mesh=MESH2)
+    assert sp2[0] == "pod"
+
+
+def test_period_axis_never_sharded():
+    # period axis (dim1 == num_periods) skipped even when divisible
+    sp = _spec((2, 16, 8192, 24576), "node_fsdp", periods=16)
+    assert sp[1] is None
+
+
+def test_cache_spec_kv():
+    # [n, P, b, t, kvh, hd]: node->data (dp), hd->model
+    sp = tuple(cache_spec((), (16, 28, 8, 32768, 8, 128),
+                          policy="node_dp", mesh=MESH1, num_periods=28))
+    assert sp[0] == "data" and sp[-1] == "model"
+    assert sp[3] is None                     # seq never sharded
+
+
+def test_serve_kv_spec_matches_cache_spec():
+    cfg = C.get_config("nemotron-4-340b")
+    sp = tuple(serve_kv_spec(MESH1, cfg, 64))
+    assert sp == ("data", None, None, "model")
+    cfg2 = C.get_config("llama3.2-3b")
+    assert tuple(serve_kv_spec(MESH1, cfg2, 8)) == \
+        (None, None, None, "model")
+
+
+def test_train_step_mixing_contracts_spread():
+    """After Morph mixing, node params are closer together than after
+    the purely-local step (consensus pressure)."""
+    cfg = C.get_config("llama3.2-3b").reduced()
+    opt = sgd(0.01)
+    n = 4
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt, n)
+    # make node params artificially diverse
+    state = state._replace(params=jax.tree_util.tree_map(
+        lambda x: x * (1 + 0.5 * jnp.arange(n).reshape(
+            (n,) + (1,) * (x.ndim - 1))), state.params))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (n, 2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    spread = lambda s: float(sum(
+        jnp.ptp(l.astype(jnp.float32), axis=0).sum()
+        for l in jax.tree_util.tree_leaves(s.params)))
+    before = spread(state)
+    step = jax.jit(make_train_step(cfg, opt,
+                                   MorphHParams(k=3, view_size=3)))
+    state2, _ = step(state, batch)
+    assert spread(state2) < before
+
+
+def test_internode_variance_units():
+    assert internode_variance(np.array([0.5, 0.5])) == 0.0
+    v = internode_variance(np.array([0.4, 0.6]))
+    assert v == pytest.approx(100.0)         # percentage points squared
+
+
+def test_runner_learns_and_logs():
+    rng = np.random.default_rng(0)
+    ds = make_image_classification(600, num_classes=4, image_size=8,
+                                   seed=0)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, 6, 0.5, rng)
+    runner = DecentralizedRunner(
+        init_fn=lambda k: cnn_params(k, in_channels=3, num_classes=4,
+                                     image_size=8, width=8),
+        loss_fn=cnn_loss, eval_fn=cnn_loss, optimizer=sgd(0.05),
+        batcher=StackedBatcher(tr, parts, 16),
+        test_batch={"images": te.images, "labels": te.labels},
+        strategy=EpidemicStrategy(n=6, k=2, seed=0),
+        cfg=RunnerConfig(n_nodes=6, rounds=25, eval_every=8))
+    log = runner.run()
+    assert log.best_accuracy() > 0.4         # > chance (0.25)
+    assert log.last().comm_bytes > 0
+    arrays = log.as_arrays()
+    assert len(arrays["round"]) == len(arrays["accuracy"])
+
+
+def test_static_strategy_zero_variance_of_edges():
+    s = StaticStrategy(n=8, degree=3, seed=0)
+    e1, w1 = s.round_edges(0)
+    e2, w2 = s.round_edges(5)
+    np.testing.assert_array_equal(e1, e2)    # fixed by construction

@@ -1,0 +1,138 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True
+executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [(4, 64), (8, 1000), (16, 8192), (33, 300), (16, 8192 + 7)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("n,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_pairwise_cosine_sweep(n, d, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(n + d), (n, d))
+         .astype(dtype))
+    got = ops.pairwise_cosine(x, interpret=True)
+    want = ref.pairwise_cosine_ref(x)
+    atol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol)
+    np.testing.assert_allclose(np.diag(np.asarray(got)), 1.0, atol=atol)
+
+
+@pytest.mark.parametrize("n,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_graph_mix_sweep(n, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n * 7 + d))
+    x = jax.random.normal(k1, (n, d)).astype(dtype)
+    w = jax.nn.softmax(jax.random.normal(k2, (n, n)))
+    got = ops.mix(w, x, interpret=True)
+    want = ref.graph_mix_ref(w, x)
+    atol = 1e-4 * np.sqrt(n) if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("n,d", [(8, 512), (16, 2048)])
+def test_graph_mix_masked_fused(n, d):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    x = jax.random.normal(k1, (n, d))
+    edges = jax.random.bernoulli(k2, 0.3, (n, n))
+    got = ops.mix_masked(edges, x, interpret=True)
+    want = ref.graph_mix_masked_ref(edges, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+
+
+def test_block_size_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4096))
+    a = ops.pairwise_cosine(x, block_d=512, interpret=True)
+    b = ops.pairwise_cosine(x, block_d=4096, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 12),
+       st.integers(1, 300))
+def test_gram_property(seed, n, d):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    got = ops.pairwise_cosine(x, interpret=True)
+    m = np.asarray(got)
+    assert m.shape == (n, n)
+    assert (np.abs(m) <= 1 + 1e-4).all()
+    np.testing.assert_allclose(m, m.T, atol=1e-5)
+
+
+def test_pytree_layer_average():
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(1), (6, 33, 5)),
+            "b": jax.random.normal(jax.random.PRNGKey(2), (6, 17))}
+    got = ops.model_pairwise_cosine(tree, interpret=True)
+    want = ref.layer_averaged_cosine_ref(tree)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+
+
+def test_mix_pytree_matches_apply_mixing():
+    from repro.core import apply_mixing
+    n = 6
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(3), (n, n)))
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(4), (n, 9, 3))}
+    got = ops.mix_pytree(w, tree, interpret=True)
+    want = apply_mixing(w, tree)
+    np.testing.assert_allclose(np.asarray(got["a"]),
+                               np.asarray(want["a"]), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# selective_scan (fused Mamba S6) vs direct recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bt,L,di,ds,blk", [
+    (2, 16, 64, 8, 32), (1, 32, 128, 16, 128), (3, 8, 96, 4, 32),
+    (2, 64, 256, 16, 64),
+])
+def test_selective_scan_sweep(bt, L, di, ds, blk):
+    from repro.kernels.selective_scan import selective_scan
+    ks = jax.random.split(jax.random.PRNGKey(bt * L + di), 6)
+    x = jax.random.normal(ks[0], (bt, L, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, L, di)))
+    b = jax.random.normal(ks[2], (bt, L, ds)) * 0.5
+    c = jax.random.normal(ks[3], (bt, L, ds)) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.3)
+    h0 = jax.random.normal(ks[5], (bt, di, ds)) * 0.1
+    y, h = selective_scan(x, dt, b, c, a, h0, di_block=blk,
+                          interpret=True)
+    yr, hr = ref.selective_scan_ref(x, dt, b, c, a, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-5)
+
+
+def test_selective_scan_chunk_chaining():
+    """Two chunks chained through h equal one long chunk."""
+    from repro.kernels.selective_scan import selective_scan
+    ks = jax.random.split(jax.random.PRNGKey(9), 6)
+    bt, L, di, ds = 2, 32, 64, 8
+    x = jax.random.normal(ks[0], (bt, L, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, L, di)))
+    b = jax.random.normal(ks[2], (bt, L, ds)) * 0.5
+    c = jax.random.normal(ks[3], (bt, L, ds)) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.3)
+    h0 = jnp.zeros((bt, di, ds))
+    y_full, h_full = selective_scan(x, dt, b, c, a, h0, di_block=64,
+                                    interpret=True)
+    half = L // 2
+    y1, h1 = selective_scan(x[:, :half], dt[:, :half], b[:, :half],
+                            c[:, :half], a, h0, di_block=64,
+                            interpret=True)
+    y2, h2 = selective_scan(x[:, half:], dt[:, half:], b[:, half:],
+                            c[:, half:], a, h1, di_block=64,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               atol=1e-5)

@@ -1,0 +1,97 @@
+"""College-admission matching (§III-B) invariants for both the host and
+in-graph implementations."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import deferred_acceptance, match_jax
+
+
+def _random_instance(rng, n, k):
+    scores = rng.uniform(0, 1, (n, n))
+    np.fill_diagonal(scores, -1)
+    prefs = [list(np.argsort(-scores[i])) for i in range(n)]
+    prefs = [[j for j in p if j != i] for i, p in enumerate(prefs)]
+    return prefs, scores
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.integers(3, 12), st.integers(1, 4))
+def test_host_degree_invariants(seed, n, k):
+    k = min(k, n - 1)
+    rng = np.random.default_rng(seed)
+    prefs, scores = _random_instance(rng, n, k)
+    edges = deferred_acceptance(prefs, scores.T, k_in=k, k_out=k)
+    assert not edges.diagonal().any()
+    assert (edges.sum(axis=1) <= k).all()          # in-degree
+    assert (edges.sum(axis=0) <= k).all()          # out-degree cap
+
+
+def test_host_full_in_degree_when_supply_allows():
+    """With everyone requesting everyone, all nodes reach in-degree k
+    (total supply n*k == total demand n*k)."""
+    n, k = 8, 3
+    rng = np.random.default_rng(0)
+    prefs, scores = _random_instance(rng, n, k)
+    edges = deferred_acceptance(prefs, scores.T, k_in=k, k_out=k)
+    assert (edges.sum(axis=1) == k).all()
+
+
+def test_host_stability():
+    """No blocking pair: receiver i wanting (but not getting) sender j
+    while j serves someone it likes strictly less."""
+    n, k = 7, 2
+    rng = np.random.default_rng(1)
+    prefs, scores = _random_instance(rng, n, k)
+    sender_scores = scores.T
+    edges = deferred_acceptance(prefs, sender_scores, k_in=k, k_out=k)
+    for i in range(n):
+        got = set(np.flatnonzero(edges[i]))
+        if len(got) >= k:
+            continue
+        for j in prefs[i]:
+            if j in got:
+                continue
+            served = np.flatnonzero(edges[:, j])
+            if len(served) < k:
+                pytest.fail(f"blocking pair: {j} has spare capacity "
+                            f"but rejected {i}")
+            worst = min(sender_scores[j, r] for r in served)
+            assert sender_scores[j, i] <= worst + 1e-12, \
+                f"blocking pair ({i}, {j})"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6), st.integers(3, 10), st.integers(1, 3))
+def test_jax_degree_invariants(seed, n, k):
+    k = min(k, n - 1)
+    rng = np.random.default_rng(seed)
+    recv = rng.uniform(0, 1, (n, n))
+    send = rng.uniform(0, 1, (n, n))
+    cand = rng.random((n, n)) < 0.7
+    edges = np.asarray(match_jax(jnp.asarray(recv), jnp.asarray(send),
+                                 jnp.asarray(cand), k, k))
+    assert not edges.diagonal().any()
+    assert (edges.sum(axis=1) <= k).all()
+    assert (edges.sum(axis=0) <= k).all()
+    assert not (edges & ~(cand & ~np.eye(n, dtype=bool))).any()
+
+
+def test_jax_fills_when_everyone_asks():
+    """With complete candidate lists, near-saturation: a node can fall
+    one short only when its sole remaining supplier would be itself
+    (self-loops are excluded)."""
+    n, k = 8, 3
+    rng = np.random.default_rng(2)
+    recv = rng.uniform(0, 1, (n, n))
+    edges = np.asarray(match_jax(jnp.asarray(recv),
+                                 jnp.asarray(recv.T),
+                                 jnp.ones((n, n), bool), k, k))
+    indeg = edges.sum(axis=1)
+    assert (indeg >= k - 1).all()
+    assert indeg.mean() >= k - 0.5
+    # any under-filled receiver must coincide with an under-subscribed
+    # sender slot it cannot legally take (itself)
+    for i in np.flatnonzero(indeg < k):
+        assert edges[:, i].sum() < k

@@ -1,0 +1,88 @@
+"""In-graph (jitted) Morph controller tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (init_state, is_connected, is_row_stochastic,
+                        mix_round, pairwise_model_similarity,
+                        random_regular_graph, update_topology)
+from repro.kernels import ops
+
+
+def _setup(n=12, deg=4, seed=0, dim=48):
+    rng = np.random.default_rng(seed)
+    adj = jnp.asarray(random_regular_graph(n, deg, rng))
+    state = init_state(jax.random.PRNGKey(seed), adj)
+    params = {"w": jnp.asarray(rng.normal(size=(n, dim)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(n, 8)), jnp.float32)}
+    return state, params
+
+
+def test_update_topology_invariants():
+    state, params = _setup()
+    step = jax.jit(lambda s, p: update_topology(s, p, k=3, view_size=5,
+                                                beta=100.0))
+    for _ in range(6):
+        state, w = step(state, params)
+        edges = np.asarray(state.edges)
+        assert (edges.sum(axis=1) <= 3).all()
+        assert (edges.sum(axis=0) <= 3).all()
+        assert not edges.diagonal().any()
+        assert is_row_stochastic(np.asarray(w, np.float64), atol=1e-5)
+
+
+def test_gossip_expands_known():
+    state, params = _setup()
+    before = int(state.known.sum())
+    for _ in range(5):
+        state, _ = update_topology(state, params, k=3, view_size=5,
+                                   beta=100.0)
+    assert int(state.known.sum()) > before
+
+
+def test_similarity_estimates_converge_to_truth():
+    state, params = _setup()
+    truth = np.asarray(pairwise_model_similarity(params))
+    for _ in range(8):
+        state, _ = update_topology(state, params, k=3, view_size=5,
+                                   beta=100.0)
+    valid = np.asarray(state.sim_valid)
+    est = np.asarray(state.sim)
+    # direct measurements must be exact; transitive ones approximate
+    direct = np.asarray(state.edges)
+    np.testing.assert_allclose(est[direct], truth[direct], atol=1e-4)
+    assert valid.sum() > direct.sum()        # some transitive knowledge
+
+
+def test_mix_round_moves_toward_consensus():
+    state, params = _setup()
+    state, w = update_topology(state, params, k=3, view_size=5, beta=100.0)
+    mixed = mix_round(state, params)
+    spread = lambda t: float(jnp.max(jnp.ptp(t["w"], axis=0)))
+    assert spread(mixed) <= spread(params) + 1e-6
+
+
+def test_pallas_sim_fn_swap():
+    """The Pallas kernel is a drop-in sim_fn for the controller."""
+    state, params = _setup()
+    sim_kernel = lambda p: ops.model_pairwise_cosine(p, interpret=True)
+    s1, w1 = update_topology(state, params, k=3, view_size=5, beta=100.0,
+                             sim_fn=sim_kernel)
+    truth = pairwise_model_similarity(params)
+    got = ops.model_pairwise_cosine(params, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(truth),
+                               atol=1e-4)
+    assert (np.asarray(s1.edges).sum(axis=1) <= 3).all()
+
+
+def test_connectivity_with_random_injection():
+    """view_size > k (random edges) keeps the union graph connected over
+    a few rounds (paper Fig. 2 logic)."""
+    state, params = _setup(n=16, deg=4)
+    union = np.zeros((16, 16), bool)
+    for _ in range(4):
+        state, _ = update_topology(state, params, k=3, view_size=5,
+                                   beta=100.0)
+        union |= np.asarray(state.edges)
+    assert is_connected(union)

@@ -1,0 +1,107 @@
+"""Eq. 5 / Alg. 3 selection tests — including the Gumbel-top-k ==
+sequential-softmax-without-replacement equivalence the controller relies
+on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (random_injection, sample_gumbel_topk,
+                        sample_sequential, softmax_logits,
+                        update_wanted_senders, update_wanted_senders_host)
+
+
+def test_sequential_respects_mask_and_k():
+    rng = np.random.default_rng(0)
+    sim = rng.uniform(-1, 1, 10)
+    mask = np.zeros(10, bool)
+    mask[[1, 3, 5]] = True
+    got = sample_sequential(rng, sim, mask, k=5, beta=2.0)
+    assert set(got) == {1, 3, 5}            # only 3 candidates exist
+    assert len(set(got)) == len(got)
+
+
+def test_gumbel_topk_validity():
+    key = jax.random.PRNGKey(0)
+    sim = jnp.linspace(-1, 1, 8)
+    mask = jnp.array([1, 1, 0, 0, 1, 1, 0, 0], bool)
+    idx, valid = sample_gumbel_topk(key, sim, mask, k=4, beta=1.0)
+    assert int(valid.sum()) == 4            # 4 candidates, k=4
+    assert set(np.asarray(idx)[np.asarray(valid)]) == {0, 1, 4, 5}
+
+
+def test_gumbel_matches_sequential_distribution():
+    """Inclusion frequencies of both samplers agree (they sample the same
+    without-replacement softmax distribution — Vieira'14/Kool'19)."""
+    n, k, beta, trials = 8, 3, 3.0, 4000
+    rng = np.random.default_rng(1)
+    sim = rng.uniform(-1, 1, n)
+    mask = np.ones(n, bool)
+    seq_counts = np.zeros(n)
+    for _ in range(trials):
+        seq_counts[sample_sequential(rng, sim, mask, k, beta)] += 1
+    gum_counts = np.zeros(n)
+    keys = jax.random.split(jax.random.PRNGKey(2), trials)
+    idxs, valids = jax.vmap(
+        lambda kk: sample_gumbel_topk(kk, jnp.asarray(sim),
+                                      jnp.asarray(mask), k, beta))(keys)
+    for idx, valid in zip(np.asarray(idxs), np.asarray(valids)):
+        gum_counts[idx[valid]] += 1
+    p_seq, p_gum = seq_counts / trials, gum_counts / trials
+    np.testing.assert_allclose(p_seq, p_gum, atol=0.05)
+
+
+def test_most_dissimilar_preferred():
+    """Lower similarity -> higher selection probability (Eq. 5)."""
+    n, trials = 6, 2000
+    sim = jnp.array([0.9, 0.5, 0.1, -0.3, -0.7, -0.95])
+    mask = jnp.ones(n, bool)
+    counts = np.zeros(n)
+    keys = jax.random.split(jax.random.PRNGKey(3), trials)
+    idxs, valids = jax.vmap(
+        lambda kk: sample_gumbel_topk(kk, sim, mask, 2, beta=5.0))(keys)
+    for idx, valid in zip(np.asarray(idxs), np.asarray(valids)):
+        counts[idx[valid]] += 1
+    assert np.all(np.diff(counts) >= -trials * 0.03)   # ~monotone up
+
+
+def test_random_injection_uniform():
+    n, trials = 10, 3000
+    pool = jnp.array([1] * 5 + [0] * 5, bool)
+    counts = np.zeros(n)
+    keys = jax.random.split(jax.random.PRNGKey(4), trials)
+    for kk in keys:
+        idx, valid = random_injection(kk, pool, 2)
+        counts[np.asarray(idx)[np.asarray(valid)]] += 1
+    assert counts[5:].sum() == 0
+    np.testing.assert_allclose(counts[:5] / trials, 0.4, atol=0.05)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 12), st.integers(1, 5),
+       st.integers(0, 4))
+def test_view_composition_property(seed, n, k, extra):
+    """V = C_b u R: size <= view_size, diversity picks from C_A, random
+    picks from C \\ C_A (Alg. 3)."""
+    k = min(k, n - 1)
+    view_size = k + extra
+    rng = np.random.default_rng(seed)
+    sim = rng.uniform(-1, 1, n)
+    ca = rng.random(n) < 0.5
+    c = ca | (rng.random(n) < 0.5)
+    view = update_wanted_senders_host(rng, sim, ca, c, k, view_size, 3.0)
+    assert view.sum() <= view_size
+    assert (view & ~c).sum() == 0            # never selects unknown peers
+    key = jax.random.PRNGKey(seed)
+    jview = np.asarray(update_wanted_senders(
+        key, jnp.asarray(sim), jnp.asarray(ca), jnp.asarray(c),
+        k, view_size, 3.0))
+    assert jview.sum() <= view_size
+    assert (jview & ~c).sum() == 0
+
+
+def test_softmax_logits_sign():
+    sim = jnp.array([0.5, -0.5])
+    lg = softmax_logits(sim, beta=2.0)
+    assert float(lg[1]) > float(lg[0])       # dissimilar peer wins

@@ -1,0 +1,104 @@
+"""Eq. 3 (per-layer cosine) and Eq. 4 (transitive estimation) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SimilarityHistory, SimilarityReport, angular_bound,
+                        layer_cosine, model_similarity,
+                        pairwise_model_similarity, similarity_matrix_numpy)
+
+
+def _tree(key, n=None):
+    ks = jax.random.split(key, 3)
+    shape = lambda s: ((n,) + s) if n else s
+    return {"a": jax.random.normal(ks[0], shape((4, 8))),
+            "b": jax.random.normal(ks[1], shape((16,))),
+            "c": jax.random.normal(ks[2], shape((2, 3, 5)))}
+
+
+def test_layer_cosine_identity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 32))
+    assert float(layer_cosine(x, x)) == pytest.approx(1.0, abs=1e-6)
+    assert float(layer_cosine(x, -x)) == pytest.approx(-1.0, abs=1e-6)
+    assert float(layer_cosine(x, 3.0 * x)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_model_similarity_is_layer_mean():
+    t1 = _tree(jax.random.PRNGKey(1))
+    t2 = _tree(jax.random.PRNGKey(2))
+    sims = [float(layer_cosine(a, b)) for a, b in
+            zip(jax.tree_util.tree_leaves(t1),
+                jax.tree_util.tree_leaves(t2))]
+    assert float(model_similarity(t1, t2)) == pytest.approx(
+        np.mean(sims), abs=1e-6)
+
+
+def test_pairwise_matches_pairs_and_numpy():
+    n = 6
+    stacked = _tree(jax.random.PRNGKey(3), n=n)
+    mat = np.asarray(pairwise_model_similarity(stacked))
+    assert mat.shape == (n, n)
+    np.testing.assert_allclose(np.diag(mat), 1.0, atol=1e-5)
+    np.testing.assert_allclose(mat, mat.T, atol=1e-5)
+    for i in range(n):
+        for j in range(n):
+            ti = jax.tree_util.tree_map(lambda x: x[i], stacked)
+            tj = jax.tree_util.tree_map(lambda x: x[j], stacked)
+            assert mat[i, j] == pytest.approx(
+                float(model_similarity(ti, tj)), abs=1e-4)
+    np_mat = similarity_matrix_numpy(
+        {k: np.asarray(v) for k, v in stacked.items()})
+    np.testing.assert_allclose(mat, np_mat, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pairwise_bounds_property(seed):
+    stacked = _tree(jax.random.PRNGKey(seed), n=4)
+    mat = np.asarray(pairwise_model_similarity(stacked))
+    assert (mat <= 1.0 + 1e-5).all() and (mat >= -1.0 - 1e-5).all()
+
+
+def test_history_direct_beats_reports():
+    h = SimilarityHistory()
+    h.observe_direct(3, 0.7)
+    h.observe_report(SimilarityReport(t=0, reporter=3, target=5, sigma=0.5))
+    assert h.estimate(3) == 0.7
+    # report about 5 via reporter 3 (known directly): 0.7 * 0.5
+    assert h.estimate(5) == pytest.approx(0.35)
+    assert h.estimate(99) is None
+
+
+def test_history_depth_five():
+    h = SimilarityHistory()
+    h.observe_direct(1, 1.0)
+    for t in range(10):
+        h.observe_report(SimilarityReport(t=t, reporter=1, target=2,
+                                          sigma=t / 10))
+    # only the 5 most recent (sigma .5 .. .9) contribute (paper's |H_z|=5)
+    assert h.estimate(2) == pytest.approx(np.mean([.5, .6, .7, .8, .9]))
+
+
+def test_history_ignores_unknown_reporters():
+    h = SimilarityHistory()
+    h.observe_report(SimilarityReport(t=0, reporter=7, target=2, sigma=0.9))
+    assert h.estimate(2) is None            # never met reporter 7
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-1, 1), st.floats(-1, 1))
+def test_angular_bound_brackets_truth(s1, s2):
+    lo, hi = angular_bound(s1, s2)
+    assert -1.0 - 1e-9 <= lo <= hi <= 1.0 + 1e-9
+
+
+def test_angular_bound_holds_for_real_vectors():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        a, b, c = rng.normal(size=(3, 16))
+        cos = lambda x, y: float(np.dot(x, y) /
+                                 (np.linalg.norm(x) * np.linalg.norm(y)))
+        lo, hi = angular_bound(cos(a, b), cos(b, c))
+        assert lo - 1e-9 <= cos(a, c) <= hi + 1e-9

@@ -1,0 +1,168 @@
+"""data / optim / checkpoint substrate tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data import (StackedBatcher, TokenBatcher, by_writer_partition,
+                        dirichlet_partition, heterogeneity,
+                        make_image_classification, make_token_stream,
+                        train_test_split)
+from repro.optim import (adamw, apply_updates, chain_clip, constant,
+                         cosine_decay, global_norm, linear_warmup_cosine,
+                         sgd)
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_dirichlet_partition_covers_disjointly():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 3000)
+    parts = dirichlet_partition(labels, 16, 0.1, rng)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+
+
+def test_dirichlet_alpha_controls_heterogeneity():
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 10, 5000)
+    het = {a: heterogeneity(
+        labels, dirichlet_partition(labels, 20, a, rng), 10)
+        for a in (0.1, 100.0)}
+    assert het[0.1] > het[100.0] + 0.2      # alpha=0.1 is strongly non-IID
+
+
+def test_writer_partition():
+    rng = np.random.default_rng(2)
+    ds = make_image_classification(800, num_classes=5, image_size=8,
+                                   writers=12, seed=0)
+    parts = by_writer_partition(ds.writer_ids, 6, rng)
+    assert sum(len(p) for p in parts) == 800
+    for p in parts:                          # whole writers per node
+        assert len(p) > 0
+
+
+def test_batchers_shapes_and_determinism():
+    ds = make_image_classification(400, num_classes=4, image_size=8,
+                                   seed=0)
+    rng = np.random.default_rng(3)
+    parts = dirichlet_partition(ds.labels, 4, 0.5, rng)
+    b1 = StackedBatcher(ds, parts, 8, seed=1).next()
+    b2 = StackedBatcher(ds, parts, 8, seed=1).next()
+    assert b1["images"].shape == (4, 8, 8, 8, 3)
+    np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    toks = make_token_stream(2000, 32, seed=0)
+    tb = TokenBatcher(toks, 4, 16, seed=0).next()
+    np.testing.assert_array_equal(tb["tokens"][:, 1:], tb["labels"][:, :-1])
+
+
+def test_markov_stream_is_learnable():
+    """Entropy of the Markov stream is far below uniform — a model can
+    beat ln(V)."""
+    V = 16
+    toks = make_token_stream(50_000, V, seed=0, concentration=0.05)
+    joint = np.zeros((V, V))
+    for a, b in zip(toks[:-1], toks[1:]):
+        joint[a, b] += 1
+    cond = joint / np.maximum(joint.sum(1, keepdims=True), 1)
+    marg = joint.sum(1) / joint.sum()
+    h = -np.sum(marg * np.sum(np.where(cond > 0, cond * np.log(cond), 0),
+                              axis=1))
+    assert h < 0.7 * np.log(V)
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+
+def test_sgd_matches_formula():
+    opt = sgd(0.1)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -1.0])}
+    st_ = opt.init(p)
+    upd, st_ = opt.update(g, st_, p)
+    new = apply_updates(p, upd)
+    np.testing.assert_allclose(np.asarray(new["w"]), [0.95, 2.1],
+                               atol=1e-6)
+
+
+def test_sgd_momentum_accumulates():
+    opt = sgd(1.0, momentum=0.9)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    st_ = opt.init(p)
+    vals = []
+    for _ in range(3):
+        upd, st_ = opt.update(g, st_, p)
+        vals.append(float(upd["w"][0]))
+    np.testing.assert_allclose(vals, [-1.0, -1.9, -2.71], atol=1e-6)
+
+
+def test_adamw_direction_and_decay():
+    opt = adamw(1e-2, weight_decay=0.1)
+    p = {"w": jnp.array([10.0])}
+    g = {"w": jnp.array([1.0])}
+    st_ = opt.init(p)
+    upd, st_ = opt.update(g, st_, p)
+    assert float(upd["w"][0]) < 0            # descends
+    opt2 = adamw(1e-2, weight_decay=0.0)
+    upd2, _ = opt2.update(g, opt2.init(p), p)
+    assert upd["w"][0] < upd2["w"][0]        # decay pulls harder at w=10
+
+
+def test_clip():
+    opt = chain_clip(sgd(1.0), max_norm=1.0)
+    p = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    upd, _ = opt.update(g, opt.init(p), p)
+    assert float(global_norm(upd)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedules():
+    c = constant(0.5)
+    assert float(c(jnp.int32(100))) == 0.5
+    cd = cosine_decay(1.0, 100)
+    assert float(cd(jnp.int32(0))) == pytest.approx(1.0)
+    assert float(cd(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    wc = linear_warmup_cosine(1.0, 10, 100)
+    assert float(wc(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(wc(jnp.int32(10))) == pytest.approx(1.0, abs=0.06)
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip():
+    tree = {"params": {"w": jnp.ones((3, 4), jnp.bfloat16),
+                       "b": np.arange(5, dtype=np.int64)},
+            "nested": (jnp.zeros(2), [jnp.float32(3.5)]),
+            "meta": {"step": 7, "name": "x", "flag": True}}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.msgpack.zst")
+        save_pytree(path, tree)
+        back = load_pytree(path)
+    assert back["meta"] == {"step": 7, "name": "x", "flag": True}
+    assert jnp.asarray(back["params"]["w"]).dtype == jnp.bfloat16
+    np.testing.assert_array_equal(back["params"]["b"], np.arange(5))
+    assert isinstance(back["nested"], tuple)
+
+
+def test_manager_retention_and_restore():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        for s in (10, 20, 30, 40):
+            cm.save(s, {"v": jnp.full(2, float(s))})
+        assert cm.steps() == [30, 40]
+        step, tree = cm.restore()
+        assert step == 40 and float(tree["v"][0]) == 40.0
+        step, tree = cm.restore(30)
+        assert step == 30

@@ -1,0 +1,113 @@
+"""Graph generators/metrics and mixing-matrix tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (apply_mixing, connectivity_probability,
+                        fully_connected, fully_connected_weights,
+                        in_degrees, is_connected, is_doubly_stochastic,
+                        is_row_stochastic, isolated_nodes,
+                        metropolis_hastings_weights, mix_numpy,
+                        out_degrees, random_out_regular,
+                        random_regular_graph, uniform_weights,
+                        uniform_weights_jax)
+
+
+def test_regular_graph():
+    rng = np.random.default_rng(0)
+    adj = random_regular_graph(20, 4, rng)
+    assert (adj.sum(axis=1) == 4).all()
+    assert (adj == adj.T).all()
+    assert not adj.diagonal().any()
+
+
+def test_out_regular_and_isolation():
+    rng = np.random.default_rng(0)
+    edges = random_out_regular(50, 3, rng)
+    assert (out_degrees(edges) == 3).all()      # k recipients each
+    iso = isolated_nodes(edges)
+    assert (in_degrees(edges)[iso] == 0).all()
+
+
+def test_el_isolation_grows_at_low_k():
+    """Paper Fig. 7: EL's random selection isolates more nodes at k=3
+    than k=7."""
+    rng = np.random.default_rng(1)
+    iso = {k: np.mean([len(isolated_nodes(random_out_regular(100, k, rng)))
+                       for _ in range(50)]) for k in (3, 7)}
+    assert iso[3] > iso[7]
+    assert iso[3] > 1.0                          # clearly present at k=3
+
+
+def test_connectivity_probability_monotone_in_dr():
+    """Paper Fig. 2: more random edges -> more likely connected."""
+    p = [connectivity_probability(60, d_s=2, d_r=dr, trials=40, seed=0)
+         for dr in (0, 1, 2)]
+    assert p[0] <= p[1] <= p[2]
+    assert p[2] > 0.9                            # d_r=2 suffices (paper)
+
+
+def test_fully_connected():
+    fc = fully_connected(5)
+    assert fc.sum() == 20 and not fc.diagonal().any()
+    assert is_connected(fc)
+
+
+def test_uniform_weights():
+    rng = np.random.default_rng(2)
+    edges = random_out_regular(10, 3, rng)
+    w = uniform_weights(edges)
+    assert is_row_stochastic(w)
+    iso = isolated_nodes(edges)
+    for i in iso:
+        assert w[i, i] == 1.0                    # isolated keeps own model
+    np.testing.assert_allclose(
+        np.asarray(uniform_weights_jax(jnp.asarray(edges))), w, atol=1e-6)
+
+
+def test_mh_weights_doubly_stochastic():
+    rng = np.random.default_rng(3)
+    adj = random_regular_graph(12, 3, rng)
+    w = metropolis_hastings_weights(adj)
+    assert is_doubly_stochastic(w)
+    with pytest.raises(ValueError):
+        metropolis_hastings_weights(random_out_regular(6, 2, rng))
+
+
+def test_fc_weights_consensus_in_one_round():
+    w = fully_connected_weights(6)
+    x = np.random.default_rng(4).normal(size=(6, 10))
+    mixed = w @ x
+    np.testing.assert_allclose(mixed, np.broadcast_to(mixed[0], mixed.shape), atol=1e-9)
+
+
+def test_apply_mixing_matches_numpy():
+    rng = np.random.default_rng(5)
+    n = 8
+    edges = random_out_regular(n, 3, rng)
+    w = uniform_weights(edges)
+    tree = {"a": rng.normal(size=(n, 4, 3)).astype(np.float32),
+            "b": rng.normal(size=(n, 7)).astype(np.float32)}
+    got = apply_mixing(jnp.asarray(w, jnp.float32),
+                       {k: jnp.asarray(v) for k, v in tree.items()})
+    want = mix_numpy(w, tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k]), want[k], atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_mixing_preserves_consensus_property(seed):
+    """Row-stochastic mixing leaves a consensus state unchanged and
+    contracts the spread (max-min) of any state."""
+    rng = np.random.default_rng(seed)
+    n = 6
+    edges = random_out_regular(n, 2, rng)
+    w = uniform_weights(edges)
+    consensus = np.ones((n, 5)) * rng.normal()
+    np.testing.assert_allclose(w @ consensus, consensus, atol=1e-9)
+    x = rng.normal(size=(n, 5))
+    y = w @ x
+    assert (y.max(0) - y.min(0) <= x.max(0) - x.min(0) + 1e-9).all()
