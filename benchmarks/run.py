@@ -32,8 +32,8 @@ def main(argv=None):
     t1_rounds = 400 if args.full else 200
 
     from . import (fig2_connectivity, fig3_curves, fig4_connectivity_levels,
-                   fig5_ablation, fig67_isolation, kernel_bench, roofline,
-                   table1_accuracy)
+                   fig5_ablation, fig67_isolation, fig8_async, kernel_bench,
+                   roofline, table1_accuracy)
 
     sections = [
         ("fig2", lambda: fig2_connectivity.main(
@@ -53,9 +53,18 @@ def main(argv=None):
              "--nodes", str(nodes)]
             + ([] if args.full else ["--betas", "5", "500",
                                      "--deltas", "1", "25"]))),
+        ("fig8", lambda: fig8_async.main(
+            ["--rounds", "60" if args.full else "18",
+             "--nodes", "16" if args.full else "8"])),
         ("kernels", lambda: kernel_bench.main([])),
         ("roofline", lambda: roofline.main(["--csv"])),
     ]
+
+    names = [name for name, _ in sections]
+    if args.only and args.only not in names:
+        print(f"unknown section {args.only!r}; valid sections: "
+              f"{', '.join(names)}", file=sys.stderr)
+        return 2
 
     failures = 0
     for name, fn in sections:
@@ -71,7 +80,9 @@ def main(argv=None):
             failures += 1
             print(f"section_FAILED,{name}", flush=True)
             traceback.print_exc()
-    return failures
+    if failures:
+        print(f"benchmark_failures,{failures}", file=sys.stderr)
+    return min(failures, 125)    # nonzero exit status on any failed section
 
 
 if __name__ == "__main__":

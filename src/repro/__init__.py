@@ -13,6 +13,9 @@ optim       SGD/AdamW + schedules (pure pytree ops).
 checkpoint  msgpack+zstd pytree checkpoints.
 dlrt        Decentralized-learning runtime (round loop, metrics,
             pjit/shard_map distribution).
+netsim      Event-driven network simulation (virtual clock, transport
+            with latency/loss/partitions, churn + stragglers) and the
+            asynchronous runtime.
 kernels     Pallas TPU kernels (pairwise cosine, graph mixing) + oracles.
 configs     Assigned architecture configs + paper CNNs.
 launch      Production mesh, multi-pod dry-run, training launcher.

@@ -4,7 +4,8 @@ Public surface re-exported here; see DESIGN.md §3 for the module map.
 """
 from .similarity import (model_similarity, pairwise_model_similarity,
                          layer_cosine, SimilarityHistory, SimilarityReport,
-                         angular_bound, similarity_matrix_numpy)
+                         angular_bound, similarity_matrix_numpy,
+                         node_row, pair_similarity_numpy)
 from .selection import (sample_sequential, sample_gumbel_topk,
                         update_wanted_senders, update_wanted_senders_host,
                         random_injection, softmax_logits)
@@ -18,14 +19,17 @@ from .mixing import (uniform_weights, metropolis_hastings_weights,
                      apply_mixing, mix_numpy, is_row_stochastic,
                      is_doubly_stochastic)
 from .baselines import (TopologyStrategy, StaticStrategy,
-                        FullyConnectedStrategy, EpidemicStrategy)
-from .protocol import MorphConfig, MorphProtocol, MorphNodeState
+                        FullyConnectedStrategy, EpidemicStrategy,
+                        InGraphMorphStrategy)
+from .protocol import (MorphConfig, MorphProtocol, MorphNodeState,
+                       ConnectRequest, ConnectAccept, ConnectReject,
+                       GossipDigest, NegotiationPlan)
 from .morph import MorphGraphState, init_state, update_topology, mix_round
 
 __all__ = [
     "model_similarity", "pairwise_model_similarity", "layer_cosine",
     "SimilarityHistory", "SimilarityReport", "angular_bound",
-    "similarity_matrix_numpy",
+    "similarity_matrix_numpy", "node_row", "pair_similarity_numpy",
     "sample_sequential", "sample_gumbel_topk", "update_wanted_senders",
     "update_wanted_senders_host", "random_injection", "softmax_logits",
     "deferred_acceptance", "match_jax",
@@ -36,7 +40,9 @@ __all__ = [
     "fully_connected_weights", "uniform_weights_jax", "apply_mixing",
     "mix_numpy", "is_row_stochastic", "is_doubly_stochastic",
     "TopologyStrategy", "StaticStrategy", "FullyConnectedStrategy",
-    "EpidemicStrategy",
+    "EpidemicStrategy", "InGraphMorphStrategy",
     "MorphConfig", "MorphProtocol", "MorphNodeState",
+    "ConnectRequest", "ConnectAccept", "ConnectReject", "GossipDigest",
+    "NegotiationPlan",
     "MorphGraphState", "init_state", "update_topology", "mix_round",
 ]

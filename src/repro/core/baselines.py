@@ -22,6 +22,47 @@ import numpy as np
 from . import mixing, topology
 
 
+class InGraphMorphStrategy:
+    """Host-facing adapter around the jit-compiled Morph controller
+    (:func:`repro.core.morph.update_topology`) so the TPU-native
+    formulation can be driven by the strategy-agnostic runners — in
+    particular the event-driven :class:`repro.netsim.AsyncRunner`."""
+
+    uniform_mixing = True
+    needs_params = True       # negotiates on the actual stacked models
+
+    def __init__(self, n: int, k: int, view_size: Optional[int] = None,
+                 beta: float = 500.0, delta_r: int = 5, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+        from .morph import init_state, update_topology
+        self.name = "morph-ingraph"
+        self.n, self.k = n, k
+        self.view_size = view_size if view_size is not None else k + 2
+        self.beta, self.delta_r = beta, delta_r
+        ring = np.roll(np.eye(n, dtype=bool), 1, axis=1) \
+            | np.roll(np.eye(n, dtype=bool), -1, axis=1)
+        self.state = init_state(jax.random.PRNGKey(seed), jnp.asarray(ring))
+        self._update = update_topology
+        self._edges: Optional[np.ndarray] = None
+        self._w: Optional[np.ndarray] = None
+
+    def round_edges(self, rnd: int, stacked_params=None):
+        import jax
+        import jax.numpy as jnp
+        if self._edges is None or rnd % self.delta_r == 0:
+            if stacked_params is None:
+                raise ValueError("in-graph Morph needs stacked params on "
+                                 "negotiation rounds")
+            stacked = jax.tree_util.tree_map(jnp.asarray, stacked_params)
+            self.state, w = self._update(
+                self.state, stacked, k=min(self.k, self.n - 1),
+                view_size=min(self.view_size, self.n - 1), beta=self.beta)
+            self._edges = np.asarray(self.state.edges)
+            self._w = np.asarray(w)
+        return self._edges, self._w
+
+
 class TopologyStrategy(Protocol):
     name: str
 
@@ -38,6 +79,7 @@ class StaticStrategy:
     degree: int
     seed: int = 0
     name: str = "static-mh"
+    needs_params = False      # round_edges ignores the stacked models
 
     def __post_init__(self):
         rng = np.random.default_rng(self.seed)
@@ -53,6 +95,7 @@ class StaticStrategy:
 class FullyConnectedStrategy:
     n: int
     name: str = "fully-connected"
+    needs_params = False
 
     def __post_init__(self):
         self._edges = topology.fully_connected(self.n)
@@ -71,6 +114,8 @@ class EpidemicStrategy:
     oracle: bool = True            # EL-Oracle vs EL-Local
     view: Optional[np.ndarray] = None   # [n, n] known-peer mask (EL-Local)
     name: str = "epidemic"
+    needs_params = False
+    uniform_mixing = True
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)

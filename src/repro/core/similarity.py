@@ -176,6 +176,32 @@ def angular_bound(sim_ij: float, sim_jk: float) -> Tuple[float, float]:
     return lo, hi
 
 
+def node_row(stacked, i: int) -> List[np.ndarray]:
+    """Node ``i``'s parameters as a list of flat float64 leaf vectors.
+
+    Shared by the synchronous protocol driver and the netsim transfer
+    path so a direct Eq. 3 measurement is bit-identical no matter which
+    runtime produced the model copy."""
+    if isinstance(stacked, np.ndarray):
+        leaves = [stacked]
+    else:
+        leaves = jax.tree_util.tree_leaves(stacked)
+    return [np.asarray(l[i]).astype(np.float64).ravel() for l in leaves]
+
+
+def pair_similarity_numpy(row_a: List[np.ndarray],
+                          row_b: List[np.ndarray]) -> float:
+    """Eq. 3 between two single-node rows from :func:`node_row`."""
+    if len(row_a) != len(row_b):
+        raise ValueError("rows disagree on leaf count")
+    acc = 0.0
+    for a, b in zip(row_a, row_b):
+        na = max(float(np.linalg.norm(a)), _EPS)
+        nb = max(float(np.linalg.norm(b)), _EPS)
+        acc += float(a @ b) / (na * nb)
+    return acc / len(row_a)
+
+
 def similarity_matrix_numpy(stacked: Mapping[str, np.ndarray] | np.ndarray,
                             ) -> np.ndarray:
     """Numpy twin of :func:`pairwise_model_similarity` for the host-side

@@ -4,12 +4,13 @@ from .distributed import (MorphHParams, TrainState, abstract_train_state,
                           leaf_spec, make_serve_step, make_train_step,
                           node_axes, params_sharding, replicated,
                           train_state_sharding)
-from .metrics import MetricsLog, RoundRecord, internode_variance
+from .metrics import (MetricsLog, NetMetricsLog, NetRecord, RoundRecord,
+                      internode_variance)
 from .runtime import DecentralizedRunner, RunnerConfig
 
 __all__ = ["MorphHParams", "TrainState", "abstract_train_state",
            "batch_sharding", "cache_sharding", "init_train_state",
            "leaf_spec", "make_serve_step", "make_train_step", "node_axes",
            "params_sharding", "replicated", "train_state_sharding",
-           "MetricsLog", "RoundRecord", "internode_variance",
-           "DecentralizedRunner", "RunnerConfig"]
+           "MetricsLog", "NetMetricsLog", "NetRecord", "RoundRecord",
+           "internode_variance", "DecentralizedRunner", "RunnerConfig"]

@@ -4,6 +4,12 @@ Four paper metrics: mean test accuracy, mean test loss, **inter-node
 variance** of accuracies (fairness/stability — Fig. 3c), and cumulative
 communication cost (model transfers x bytes).  Plus isolated-node counts
 (Figs. 6/7) pulled from the topology state.
+
+The netsim runtime adds a **wall-clock domain** on top
+(:class:`NetRecord` / :class:`NetMetricsLog`): records are indexed by
+virtual seconds rather than rounds, so time-to-accuracy, messages in
+flight, drop counts and model-staleness histograms can be compared
+across network profiles (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -60,6 +66,83 @@ class MetricsLog:
                                   for r in self.records]),
             "comm_bytes": np.array([r.comm_bytes for r in self.records]),
             "isolated": np.array([r.isolated for r in self.records]),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock-domain records (event-driven runtime).
+# ---------------------------------------------------------------------------
+
+@dataclass
+class NetRecord:
+    """One evaluation point of the event-driven runtime, stamped with the
+    virtual wall clock and the network-layer counters at that instant."""
+    t: float                      # virtual seconds
+    rnd: int                      # min completed round across live nodes
+    mean_accuracy: float
+    mean_loss: float
+    internode_variance: float
+    model_bytes: int              # cumulative model-transfer payload
+    control_bytes: int            # cumulative negotiation/control payload
+    messages_in_flight: int
+    dropped: int                  # cumulative messages lost in the network
+    dead: int                     # nodes currently down
+    staleness_mean: float         # mean model age in receiver rounds;
+                                  # negative = sender ran ahead of a
+                                  # straggling receiver
+
+
+@dataclass
+class NetMetricsLog:
+    records: List[NetRecord] = field(default_factory=list)
+    staleness_hist: Dict[int, int] = field(default_factory=dict)
+
+    def add(self, rec: NetRecord) -> None:
+        self.records.append(rec)
+
+    def observe_staleness(self, rounds_old: int) -> None:
+        """``rounds_old = receiver_round - sender_round`` for one mixed-in
+        model copy; negative values mean the *receiver* was the straggler
+        (the sender's model comes from a later round than the receiver's
+        own)."""
+        key = int(rounds_old)
+        self.staleness_hist[key] = self.staleness_hist.get(key, 0) + 1
+
+    def last(self) -> NetRecord:
+        return self.records[-1]
+
+    def best_accuracy(self) -> float:
+        return max(r.mean_accuracy for r in self.records)
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        """Virtual seconds until mean accuracy first reaches ``target``
+        (the deployment-level convergence metric) or None."""
+        for r in self.records:
+            if r.mean_accuracy >= target:
+                return r.t
+        return None
+
+    def staleness_mean(self) -> float:
+        if not self.staleness_hist:
+            return 0.0
+        total = sum(self.staleness_hist.values())
+        return sum(k * v for k, v in self.staleness_hist.items()) / total
+
+    def as_arrays(self) -> Dict[str, np.ndarray]:
+        return {
+            "t": np.array([r.t for r in self.records]),
+            "round": np.array([r.rnd for r in self.records]),
+            "accuracy": np.array([r.mean_accuracy for r in self.records]),
+            "loss": np.array([r.mean_loss for r in self.records]),
+            "variance": np.array([r.internode_variance
+                                  for r in self.records]),
+            "model_bytes": np.array([r.model_bytes for r in self.records]),
+            "control_bytes": np.array([r.control_bytes
+                                       for r in self.records]),
+            "in_flight": np.array([r.messages_in_flight
+                                   for r in self.records]),
+            "dropped": np.array([r.dropped for r in self.records]),
+            "dead": np.array([r.dead for r in self.records]),
         }
 
 

@@ -58,6 +58,7 @@ class DecentralizedRunner:
         self._loss_fn = loss_fn
         self._eval_fn = eval_fn
         self.log = MetricsLog()
+        self.edge_history: list = []       # per-round in-edge matrices
         self._comm_bytes = 0
         self._model_bytes = cfg.model_bytes or sum(
             x.nbytes // cfg.n_nodes
@@ -95,6 +96,7 @@ class DecentralizedRunner:
         stacked = jax.device_get(self.params) \
             if rnd % self.cfg.sim_every == 0 else None
         edges, w = self.strategy.round_edges(rnd, stacked)
+        self.edge_history.append(np.array(edges, dtype=bool))
         self.params = self._mix(self.params, jnp.asarray(w, jnp.float32))
         self._comm_bytes += int(edges.sum()) * self._model_bytes
         return edges

@@ -1,0 +1,23 @@
+"""Event-driven network simulation for decentralized learning.
+
+Layers (DESIGN.md §5):
+
+* :mod:`~repro.netsim.events`    — priority-queue event loop, virtual clock;
+* :mod:`~repro.netsim.transport` — per-link latency/bandwidth/loss/partitions;
+* :mod:`~repro.netsim.faults`    — churn (crash/leave/rejoin) + stragglers;
+* :mod:`~repro.netsim.messages`  — network envelopes for the protocol
+  message objects defined in :mod:`repro.core.protocol`;
+* :mod:`~repro.netsim.profiles`  — LAN / WAN / flaky-WAN presets;
+* :mod:`~repro.netsim.async_runner` — the asynchronous Morph runtime.
+"""
+from . import profiles
+from .async_runner import AsyncConfig, AsyncRunner
+from .events import Event, EventLoop
+from .faults import FaultConfig, FaultModel
+from .messages import CTRL_BYTES, ModelTransfer, Packet
+from .transport import NetworkProfile, Partition, Transport, TransportStats
+
+__all__ = ["profiles", "AsyncConfig", "AsyncRunner", "Event", "EventLoop",
+           "FaultConfig", "FaultModel", "CTRL_BYTES", "ModelTransfer",
+           "Packet", "NetworkProfile", "Partition", "Transport",
+           "TransportStats"]

@@ -1,0 +1,144 @@
+"""Latency/bandwidth/loss-modelled message routing (DESIGN.md §5).
+
+A :class:`Transport` turns ``send(src, dst, payload)`` into a delivery
+event on the shared :class:`~repro.netsim.events.EventLoop`:
+
+    deliver_at = now + base_latency + jitter + size_bytes * 8 / bandwidth
+
+Messages can be dropped (i.i.d. loss rate), blocked by a network
+partition window, or black-holed because an endpoint is down (fault
+model).  All drops are visible to the simulator immediately — ``send``
+returns ``None`` — which models sender-side failure detection; the async
+runner uses that to shrink the set of transfers a receiver waits for
+instead of deadlocking.
+
+The transport keeps its own RNG so network randomness never perturbs
+protocol RNG streams: a zero-latency, zero-loss profile is *exactly* the
+idealized network the synchronous runner assumes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, Optional, Tuple
+
+import numpy as np
+
+from .events import EventLoop
+from .messages import Packet
+
+DELIVER_KIND = "net.deliver"
+
+
+@dataclass(frozen=True)
+class Partition:
+    """During ``[start, end)`` only nodes inside the same group can talk.
+    Nodes listed in no group are unreachable for the window."""
+    start: float
+    end: float
+    groups: Tuple[FrozenSet[int], ...]
+
+    def blocks(self, t: float, a: int, b: int) -> bool:
+        if not (self.start <= t < self.end):
+            return False
+        for g in self.groups:
+            if a in g and b in g:
+                return False
+        return True
+
+
+@dataclass(frozen=True)
+class NetworkProfile:
+    """Per-link network model; see ``repro.netsim.profiles`` for the
+    LAN / WAN / flaky-WAN presets the benchmarks use."""
+    name: str = "ideal"
+    base_latency_s: float = 0.0
+    jitter_s: float = 0.0            # uniform [0, jitter_s)
+    bandwidth_bps: float = math.inf  # payload serialization time
+    drop_rate: float = 0.0
+    partitions: Tuple[Partition, ...] = ()
+    seed: int = 0
+
+    def transfer_seconds(self, size_bytes: int) -> float:
+        if math.isinf(self.bandwidth_bps):
+            return 0.0
+        return size_bytes * 8.0 / self.bandwidth_bps
+
+
+@dataclass
+class TransportStats:
+    sent: int = 0
+    delivered: int = 0
+    dropped: int = 0
+    bytes_sent: int = 0
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    in_flight: int = 0
+    peak_in_flight: int = 0
+
+
+class Transport:
+    def __init__(self, profile: NetworkProfile, loop: EventLoop,
+                 faults=None, deliver_phase: int = 0):
+        self.profile = profile
+        self.loop = loop
+        self.faults = faults
+        self.deliver_phase = deliver_phase
+        self.stats = TransportStats()
+        self._rng = np.random.default_rng(profile.seed)
+
+    # -- helpers -----------------------------------------------------------
+
+    def _up(self, node: int, t: float) -> bool:
+        return self.faults is None or self.faults.is_up(node, t)
+
+    def _latency(self) -> float:
+        p = self.profile
+        lat = p.base_latency_s
+        if p.jitter_s > 0.0:
+            lat += float(self._rng.uniform(0.0, p.jitter_s))
+        return lat
+
+    def _lost(self, t_send: float, t_deliver: float,
+              src: int, dst: int) -> bool:
+        p = self.profile
+        if any(part.blocks(t_send, src, dst) for part in p.partitions):
+            return True
+        if not self._up(src, t_send) or not self._up(dst, t_deliver):
+            return True
+        if p.drop_rate > 0.0 and self._rng.random() < p.drop_rate:
+            return True
+        return False
+
+    # -- API ---------------------------------------------------------------
+
+    def send(self, src: int, dst: int, kind: str, payload: Any,
+             size_bytes: int, phase: Optional[int] = None
+             ) -> Optional[Packet]:
+        """Route one message; returns the in-flight packet, or ``None``
+        when the network ate it (loss, partition, dead endpoint).
+        ``phase`` overrides the delivery event's intra-instant phase."""
+        t = self.loop.now
+        deliver_at = t + self._latency() \
+            + self.profile.transfer_seconds(size_bytes)
+        self.stats.sent += 1
+        self.stats.bytes_sent += size_bytes
+        self.stats.bytes_by_kind[kind] = \
+            self.stats.bytes_by_kind.get(kind, 0) + size_bytes
+        if self._lost(t, deliver_at, src, dst):
+            self.stats.dropped += 1
+            return None
+        pkt = Packet(src=src, dst=dst, kind=kind, payload=payload,
+                     size_bytes=size_bytes, sent_at=t,
+                     deliver_at=deliver_at)
+        self.stats.in_flight += 1
+        self.stats.peak_in_flight = max(self.stats.peak_in_flight,
+                                        self.stats.in_flight)
+        self.loop.schedule_at(deliver_at, DELIVER_KIND, pkt,
+                              phase=self.deliver_phase
+                              if phase is None else phase)
+        return pkt
+
+    def delivered(self, pkt: Packet) -> None:
+        """The runner acknowledges a delivery event it consumed."""
+        self.stats.delivered += 1
+        self.stats.in_flight -= 1

@@ -17,8 +17,17 @@ from repro.dlrt.distributed import cache_spec, serve_kv_spec
 from repro.models.cnn import cnn_loss, cnn_params
 from repro.optim import sgd
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across JAX versions: 0.4.x wants ((name, size), ...)
+    pairs; >= 0.5 wants (sizes, names)."""
+    try:
+        return AbstractMesh(tuple(sizes), tuple(names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH1 = _abstract_mesh((16, 16), ("data", "model"))
+MESH2 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _spec(shape, policy, mesh=MESH1, periods=9, names=()):

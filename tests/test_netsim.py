@@ -1,0 +1,257 @@
+"""netsim: event loop, transport, faults, and the async runtime.
+
+The headline contract: under a zero-latency, zero-loss, zero-churn
+network with homogeneous compute, :class:`repro.netsim.AsyncRunner`
+reproduces the synchronous :class:`repro.dlrt.DecentralizedRunner`
+bit-for-bit — same per-round edge sequence, same final parameters.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (EpidemicStrategy, InGraphMorphStrategy, MorphConfig,
+                        MorphProtocol, in_degrees)
+from repro.data import (StackedBatcher, dirichlet_partition,
+                        make_image_classification, train_test_split)
+from repro.dlrt import DecentralizedRunner, RunnerConfig
+from repro.models.cnn import cnn_loss, cnn_params
+from repro.netsim import (AsyncConfig, AsyncRunner, EventLoop, FaultConfig,
+                          FaultModel, NetworkProfile, Partition, Transport,
+                          profiles)
+from repro.optim import sgd
+
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+
+def test_event_loop_orders_by_time_phase_seq():
+    loop = EventLoop()
+    loop.schedule(2.0, "b")
+    loop.schedule(1.0, "a", phase=1)
+    loop.schedule(1.0, "c", phase=0)
+    seen = []
+    loop.run(lambda batch: seen.extend(e.kind for e in batch))
+    assert seen == ["c", "a", "b"]
+    assert loop.now == 2.0
+
+
+def test_event_loop_coalesces_same_instant_same_kind():
+    loop = EventLoop()
+    for i in range(4):
+        loop.schedule(1.0, "step", i)
+    loop.schedule(1.0, "other", phase=1)
+    batches = []
+    loop.run(lambda batch: batches.append([e.payload for e in batch]))
+    assert batches[0] == [0, 1, 2, 3]        # one vectorizable batch
+    assert len(batches) == 2
+
+
+def test_event_loop_rejects_past():
+    loop = EventLoop()
+    loop.schedule(1.0, "x")
+    loop.run(lambda b: None)
+    with pytest.raises(ValueError):
+        loop.schedule_at(0.5, "y")
+
+
+# ---------------------------------------------------------------------------
+# transport
+# ---------------------------------------------------------------------------
+
+def test_transport_latency_and_bandwidth():
+    loop = EventLoop()
+    prof = NetworkProfile(name="t", base_latency_s=0.1,
+                          bandwidth_bps=8e6)   # 1 MB/s
+    tr = Transport(prof, loop)
+    pkt = tr.send(0, 1, "model", None, size_bytes=2_000_000)
+    assert pkt.deliver_at == pytest.approx(0.1 + 2.0)
+    assert tr.stats.in_flight == 1
+    got = []
+    loop.run(lambda batch: [got.append(e.payload) or tr.delivered(e.payload)
+                            for e in batch])
+    assert got == [pkt] and tr.stats.in_flight == 0
+
+
+def test_transport_drops_everything_at_rate_one():
+    loop = EventLoop()
+    tr = Transport(NetworkProfile(name="lossy", drop_rate=1.0), loop)
+    assert tr.send(0, 1, "request", None, 64) is None
+    assert tr.stats.dropped == 1 and loop.empty()
+
+
+def test_partition_blocks_cross_group_only():
+    part = Partition(start=1.0, end=2.0,
+                     groups=(frozenset({0, 1}), frozenset({2, 3})))
+    assert part.blocks(1.5, 0, 2)
+    assert not part.blocks(1.5, 0, 1)
+    assert not part.blocks(2.5, 0, 2)        # window over
+    loop = EventLoop()
+    loop.schedule(1.5, "tick")               # move clock into the window
+    loop.run(lambda b: None)
+    tr = Transport(NetworkProfile(name="p", partitions=(part,)), loop)
+    assert tr.send(0, 2, "model", None, 10) is None
+    assert tr.send(0, 1, "model", None, 10) is not None
+
+
+# ---------------------------------------------------------------------------
+# faults
+# ---------------------------------------------------------------------------
+
+def test_fault_model_stragglers_and_churn():
+    fm = FaultModel(FaultConfig(straggler_fraction=0.5,
+                                straggler_slowdown=3.0,
+                                churn_fraction=0.5, crash_fraction=0.0,
+                                mean_downtime_s=2.0, horizon_s=10.0,
+                                seed=0), n=8)
+    mults = [fm.compute_multiplier(i) for i in range(8)]
+    assert sorted(set(mults)) == [1.0, 3.0]
+    assert len(fm.ever_down()) == 4
+    for i in fm.ever_down():
+        (s, e), = fm.down_windows(i)
+        assert not fm.is_up(i, s) and fm.is_up(i, e)
+        assert fm.next_up_time(i, s) == e
+
+
+def test_fault_model_none_is_inert():
+    fm = FaultModel.none(4)
+    assert all(fm.is_up(i, t) for i in range(4) for t in (0.0, 1e9))
+    assert fm.compute_multiplier(2) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# async runtime
+# ---------------------------------------------------------------------------
+
+def _experiment(n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    ds = make_image_classification(400, num_classes=4, image_size=8,
+                                   seed=seed)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, n, 0.5, rng)
+    return tr, te, parts
+
+
+def _runner(cls, strategy, tr, te, parts, n, rounds, **kw):
+    common = dict(
+        init_fn=lambda k: cnn_params(k, in_channels=3, num_classes=4,
+                                     image_size=8, width=8),
+        loss_fn=cnn_loss, eval_fn=cnn_loss, optimizer=sgd(0.05),
+        batcher=StackedBatcher(tr, parts, 8, seed=3),
+        test_batch={"images": te.images, "labels": te.labels},
+        strategy=strategy)
+    if cls is DecentralizedRunner:
+        cfg = RunnerConfig(n_nodes=n, rounds=rounds, eval_every=1000)
+        return cls(cfg=cfg, **common)
+    cfg = AsyncConfig(n_nodes=n, rounds=rounds, eval_every=1000,
+                      compute_time_s=1.0)
+    return cls(cfg=cfg, **common, **kw)
+
+
+def _params_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def test_async_zero_latency_matches_sync_morph():
+    """Acceptance criterion: the synchronous runner is the zero-latency /
+    zero-churn special case of the event-driven runner, bit for bit."""
+    n, rounds = 6, 11                        # covers refreshes at 0, 5, 10
+    tr, te, parts = _experiment(n)
+    sync = _runner(DecentralizedRunner,
+                   MorphProtocol(MorphConfig(n=n, k=2, seed=0)),
+                   tr, te, parts, n, rounds)
+    sync.run()
+    asyn = _runner(AsyncRunner,
+                   MorphProtocol(MorphConfig(n=n, k=2, seed=0)),
+                   tr, te, parts, n, rounds, profile=profiles.ideal())
+    asyn.run()
+    assert len(sync.edge_history) == len(asyn.edge_history) == rounds
+    for r, (es, ea) in enumerate(zip(sync.edge_history, asyn.edge_history)):
+        assert np.array_equal(es, ea), f"edge sequence diverged at round {r}"
+    assert _params_equal(sync.params, asyn.params)
+    # protocol-side state agrees too: same messages were exchanged
+    assert sync.strategy.control_messages == asyn.strategy.control_messages
+    assert sync.strategy.similarity_floats == asyn.strategy.similarity_floats
+
+
+def test_async_zero_latency_matches_sync_epidemic():
+    n, rounds = 6, 8
+    tr, te, parts = _experiment(n)
+    sync = _runner(DecentralizedRunner, EpidemicStrategy(n=n, k=2, seed=0),
+                   tr, te, parts, n, rounds)
+    sync.run()
+    asyn = _runner(AsyncRunner, EpidemicStrategy(n=n, k=2, seed=0),
+                   tr, te, parts, n, rounds, profile=profiles.ideal())
+    asyn.run()
+    for es, ea in zip(sync.edge_history, asyn.edge_history):
+        assert np.array_equal(es, ea)
+    assert _params_equal(sync.params, asyn.params)
+
+
+def _flaky_setup(n, rounds, horizon):
+    profile = profiles.flaky_wan(n, partition_at=horizon * 0.3,
+                                 partition_len=horizon * 0.2, seed=1)
+    faults = FaultModel(FaultConfig(
+        straggler_fraction=0.25, straggler_slowdown=2.0,
+        churn_fraction=0.25, crash_fraction=0.0, mean_downtime_s=3.0,
+        horizon_s=horizon, seed=2), n)
+    return profile, faults
+
+
+def test_async_morph_indegree_bounded_under_churn():
+    """Satellite regression: fixed in-degree <= k must survive drops,
+    partitions, stragglers and churn (paper's robustness claim)."""
+    n, k, rounds = 8, 2, 10
+    tr, te, parts = _experiment(n)
+    profile, faults = _flaky_setup(n, rounds, horizon=rounds * 1.5)
+    asyn = _runner(AsyncRunner,
+                   MorphProtocol(MorphConfig(n=n, k=k, seed=0)),
+                   tr, te, parts, n, rounds,
+                   profile=profile, faults=faults)
+    asyn.acfg.mix_timeout_s = 2.0
+    log = asyn.run()
+    assert asyn.edge_history, "no rounds completed"
+    for edges in asyn.edge_history:
+        assert (in_degrees(edges) <= k).all()
+    assert max(asyn.realized_indegrees) <= k
+    assert asyn.transport.stats.dropped > 0          # the network did bite
+    assert asyn.transport.stats.in_flight == 0       # ledger balanced
+    assert log.records and log.staleness_hist
+
+
+def test_async_ingraph_morph_indegree_bounded_under_churn():
+    n, k, rounds = 6, 2, 8
+    tr, te, parts = _experiment(n)
+    profile, faults = _flaky_setup(n, rounds, horizon=rounds * 1.5)
+    asyn = _runner(AsyncRunner,
+                   InGraphMorphStrategy(n=n, k=k, view_size=4, seed=0),
+                   tr, te, parts, n, rounds,
+                   profile=profile, faults=faults)
+    asyn.acfg.mix_timeout_s = 2.0
+    asyn.run()
+    assert asyn.edge_history
+    for edges in asyn.edge_history:
+        assert (in_degrees(edges) <= k).all()
+    assert max(asyn.realized_indegrees) <= k
+
+
+def test_async_wallclock_metrics_progress():
+    """WAN latency shows up in the virtual clock and the accuracy still
+    improves; time-to-accuracy is queryable."""
+    n, rounds = 6, 8
+    tr, te, parts = _experiment(n)
+    asyn = _runner(AsyncRunner, EpidemicStrategy(n=n, k=2, seed=0),
+                   tr, te, parts, n, rounds, profile=profiles.wan())
+    asyn.cfg.eval_every = 4
+    asyn._eval_rounds = [0, 4, rounds - 1]
+    log = asyn.run()
+    assert len(log.records) == 3
+    ts = [r.t for r in log.records]
+    assert ts == sorted(ts) and ts[-1] > rounds * 1.0   # latency added time
+    assert log.records[-1].model_bytes > 0
+    first = log.records[0].mean_accuracy
+    assert log.best_accuracy() >= first
+    tta = log.time_to_accuracy(first)
+    assert tta is not None and tta <= ts[0]

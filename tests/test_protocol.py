@@ -51,6 +51,53 @@ def test_control_overhead_tallied():
     assert proto.similarity_floats > 0
 
 
+def test_exact_overhead_tallies_two_nodes():
+    """Hand-checkable overhead accounting on the smallest topology.
+
+    n=2, k=1: at round 0 each node knows exactly its one peer, has no
+    similarity estimate, so Alg. 3's random injection forces it to want
+    that peer — 2 requests.  Both are accepted — 2 accepts.  Nothing is
+    renegotiated until round delta_r=5, where the (now direct) estimate
+    again forces the single peer: +2 requests, +2 accepts.  Gossip
+    reports about the receiver itself are never sent, so with n=2 the
+    similarity-float payload is exactly zero forever.
+    """
+    rng = np.random.default_rng(0)
+    params = {"w": rng.normal(size=(2, 16)).astype(np.float32)}
+    proto = MorphProtocol(MorphConfig(n=2, k=1, delta_r=5, seed=0))
+    proto.round_edges(0, params)
+    assert proto.control_messages == 4           # 2 requests + 2 accepts
+    assert proto.similarity_floats == 0
+    for t in range(1, 5):
+        proto.round_edges(t, params)
+    assert proto.control_messages == 4           # no renegotiation
+    assert proto.similarity_floats == 0
+    proto.round_edges(5, params)
+    assert proto.control_messages == 8
+    assert proto.similarity_floats == 0
+
+
+def test_overhead_accounting_formula():
+    """control = sum_i |wanted_i| + |edges|; similarity floats after one
+    gossip round = sum over delivered transfers (i <- j) of j's direct
+    measurements excluding those about i (which are never sent)."""
+    n, k = 8, 2
+    rng = np.random.default_rng(1)
+    params = {"w": rng.normal(size=(n, 32)).astype(np.float32)}
+    proto = MorphProtocol(MorphConfig(n=n, k=k, delta_r=5, seed=1))
+    e0, _ = proto.round_edges(0, params)
+    wanted = sum(len(st.wanted) for st in proto.nodes)
+    assert proto.control_messages == wanted + int(e0.sum())
+    assert proto.similarity_floats == 0          # no knowledge to gossip yet
+    e1, _ = proto.round_edges(1, params)
+    assert (e0 == e1).all()                      # within the same Delta_r
+    # At round 1 sender j's digest holds its round-0 direct measurements:
+    # one per in-edge of j.  Receiver i gets all of them except target==i.
+    expected = sum(int(e0[j].sum()) - int(e0[j, i])
+                   for i in range(n) for j in np.flatnonzero(e0[i]))
+    assert proto.similarity_floats == expected
+
+
 def test_no_global_knowledge_leak():
     """A node's view never exceeds peers reachable through gossip: with a
     disconnected initial graph, knowledge stays within components."""
