@@ -1,0 +1,152 @@
+"""Fig. 9 (repo extension): round throughput of the compiled superstep.
+
+Three engines run the same Morph workload (tiny MLP population, ring-
+buffered batches so data loading is off the critical path) at n in
+{16, 50, 100}:
+
+* ``host-protocol``  — DecentralizedRunner + the message-faithful
+  MorphProtocol: the paper-faithful engine every earlier figure used.
+  Control plane on the host (numpy similarity, python gossip).
+* ``host-ingraph``   — DecentralizedRunner + InGraphMorphStrategy: the
+  negotiation is a jitted device call, but the loop still syncs to the
+  host every round (device_get for similarity, numpy edge round trips).
+* ``compiled``       — CompiledSuperstep: whole rounds fused into one
+  ``lax.scan`` program, host touched only at chunk boundaries.
+
+The headline number is ``compiled`` vs ``host-protocol`` rounds/sec —
+the speedup of this PR's engine over the repo's previous experiment
+engine (acceptance: >= 5x at n=50 on CPU, Pallas interpret mode off).
+The ``host-ingraph`` column separates how much of that is the in-graph
+controller vs the scan fusion; on CPU the scan's margin over
+``host-ingraph`` is bounded by XLA's per-op thunk overhead (identical
+inside and outside the scan), on TPU it grows with dispatch latency.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import numpy as np
+
+
+class RingBatcher:
+    """Pre-drawn stacked batches served round-robin: keeps per-round host
+    work out of the throughput measurement for every engine equally."""
+
+    def __init__(self, inner, length: int):
+        self.batches = [inner.next() for _ in range(length)]
+        self.i = 0
+
+    def next(self):
+        b = self.batches[self.i % len(self.batches)]
+        self.i += 1
+        return b
+
+
+def _mlp_params(key, d_in=192, num_classes=4, hidden=8):
+    import jax
+    import jax.numpy as jnp
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (d_in, hidden)) / math.sqrt(d_in),
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, num_classes))
+            / math.sqrt(hidden),
+            "b2": jnp.zeros((num_classes,))}
+
+
+def _mlp_loss(p, batch):
+    import jax
+    import jax.numpy as jnp
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    logits = h @ p["w2"] + p["b2"]
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], 1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"accuracy": acc}
+
+
+def _build(n: int, strategy, compiled: bool, rounds: int):
+    from repro.data import (dirichlet_partition, make_image_classification,
+                            train_test_split)
+    from repro.data.pipeline import StackedBatcher
+    from repro.dlrt import DecentralizedRunner, RunnerConfig
+    from repro.optim import sgd
+    rng = np.random.default_rng(0)
+    ds = make_image_classification(max(600, n * 20), num_classes=4,
+                                   image_size=8, seed=0)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, n, 0.5, rng)
+    bt = RingBatcher(StackedBatcher(tr, parts, 4, seed=3), 64)
+    return DecentralizedRunner(
+        init_fn=_mlp_params, loss_fn=_mlp_loss, eval_fn=_mlp_loss,
+        optimizer=sgd(0.05), batcher=bt,
+        test_batch={"images": te.images[:64], "labels": te.labels[:64]},
+        strategy=strategy,
+        cfg=RunnerConfig(n_nodes=n, rounds=rounds, eval_every=10 ** 9,
+                         sim_every=5, compiled=compiled))
+
+
+def _strategy(engine: str, n: int, k: int):
+    from repro.core import InGraphMorphStrategy, MorphConfig, MorphProtocol
+    if engine == "host-protocol":
+        return MorphProtocol(MorphConfig(n=n, k=k, seed=0))
+    return InGraphMorphStrategy(n=n, k=k, view_size=k + 2, seed=0)
+
+
+def _time_host(runner, rounds: int, warmup: int) -> float:
+    for r in range(warmup):
+        runner._round(r)
+    t0 = time.perf_counter()
+    for r in range(warmup, rounds):
+        runner._round(r)
+    return (rounds - warmup) / (time.perf_counter() - t0)
+
+
+def _time_compiled(runner, rounds: int, chunk: int) -> float:
+    chunk = min(chunk, rounds)
+    rounds -= rounds % chunk          # whole supersteps only: a ragged
+                                      # tail chunk would recompile the
+                                      # scan inside the timed region
+    engine = runner._make_engine()
+    engine.run_steps(chunk, chunk)                 # compile + warm caches
+    t0 = time.perf_counter()
+    engine.run_steps(rounds, chunk)
+    return rounds / (time.perf_counter() - t0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, nargs="+", default=[16, 50, 100])
+    ap.add_argument("--rounds", type=int, default=150)
+    ap.add_argument("--chunk", type=int, default=50,
+                    help="superstep length (rounds per scan)")
+    ap.add_argument("--k", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    warmup = max(args.rounds // 10, 5)
+    print("fig9,engine,n,rounds_per_sec")
+    speedups = {}
+    for n in args.nodes:
+        rps = {}
+        for engine in ("host-protocol", "host-ingraph"):
+            runner = _build(n, _strategy(engine, n, args.k), False,
+                            args.rounds)
+            rps[engine] = _time_host(runner, args.rounds, warmup)
+            print(f"fig9,{engine},{n},{rps[engine]:.1f}", flush=True)
+        runner = _build(n, _strategy("compiled", n, args.k), True,
+                        args.rounds)
+        rps["compiled"] = _time_compiled(runner, args.rounds, args.chunk)
+        print(f"fig9,compiled,{n},{rps['compiled']:.1f}", flush=True)
+        speedups[n] = rps["compiled"] / rps["host-protocol"]
+        print(f"fig9_derived,compiled_over_host_protocol_n{n},"
+              f"{speedups[n]:.1f}", flush=True)
+        print(f"fig9_derived,compiled_over_host_ingraph_n{n},"
+              f"{rps['compiled'] / rps['host-ingraph']:.1f}", flush=True)
+    return speedups
+
+
+if __name__ == "__main__":
+    main()

@@ -32,8 +32,8 @@ def main(argv=None):
     t1_rounds = 400 if args.full else 200
 
     from . import (fig2_connectivity, fig3_curves, fig4_connectivity_levels,
-                   fig5_ablation, fig67_isolation, fig8_async, kernel_bench,
-                   roofline, table1_accuracy)
+                   fig5_ablation, fig67_isolation, fig8_async,
+                   fig9_superstep, kernel_bench, roofline, table1_accuracy)
 
     sections = [
         ("fig2", lambda: fig2_connectivity.main(
@@ -56,6 +56,10 @@ def main(argv=None):
         ("fig8", lambda: fig8_async.main(
             ["--rounds", "60" if args.full else "18",
              "--nodes", "16" if args.full else "8"])),
+        ("fig9", lambda: fig9_superstep.main(
+            ["--rounds", "150" if args.full else "80"]
+            + (["--nodes", "16", "50", "100"] if args.full
+               else ["--nodes", "16", "50"]))),
         ("kernels", lambda: kernel_bench.main([])),
         ("roofline", lambda: roofline.main(["--csv"])),
     ]

@@ -15,9 +15,30 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+import zlib
+
+try:
+    import zstandard
+except ImportError:                      # optional: fall back to zlib
+    zstandard = None
 
 _BF16 = "bfloat16"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes, level: int) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(payload)
+    return zlib.compress(payload, min(level, 9))   # zstd levels reach 22
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "zstandard module is not installed")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _pack_leaf(x) -> dict:
@@ -69,13 +90,13 @@ def save_pytree(path: str, tree, level: int = 3) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=level).compress(payload))
+        f.write(_compress(payload, level))
     os.replace(tmp, path)
 
 
 def load_pytree(path: str):
     with open(path, "rb") as f:
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        payload = _decompress(f.read())
     return _decode(msgpack.unpackb(payload, strict_map_key=False))
 
 

@@ -20,7 +20,9 @@ from .mixing import (uniform_weights, metropolis_hastings_weights,
                      is_doubly_stochastic)
 from .baselines import (TopologyStrategy, StaticStrategy,
                         FullyConnectedStrategy, EpidemicStrategy,
-                        InGraphMorphStrategy)
+                        InGraphMorphStrategy, InGraphStaticStrategy,
+                        InGraphFullyConnectedStrategy,
+                        InGraphEpidemicStrategy)
 from .protocol import (MorphConfig, MorphProtocol, MorphNodeState,
                        ConnectRequest, ConnectAccept, ConnectReject,
                        GossipDigest, NegotiationPlan)
@@ -40,7 +42,8 @@ __all__ = [
     "fully_connected_weights", "uniform_weights_jax", "apply_mixing",
     "mix_numpy", "is_row_stochastic", "is_doubly_stochastic",
     "TopologyStrategy", "StaticStrategy", "FullyConnectedStrategy",
-    "EpidemicStrategy", "InGraphMorphStrategy",
+    "EpidemicStrategy", "InGraphMorphStrategy", "InGraphStaticStrategy",
+    "InGraphFullyConnectedStrategy", "InGraphEpidemicStrategy",
     "MorphConfig", "MorphProtocol", "MorphNodeState",
     "ConnectRequest", "ConnectAccept", "ConnectReject", "GossipDigest",
     "NegotiationPlan",

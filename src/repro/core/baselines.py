@@ -11,6 +11,23 @@ round's in-edge matrix and mixing matrix.  The runtime is strategy-agnostic.
   a fresh random k-out topology every round.  ``oracle=True`` is EL-Oracle
   (global peer knowledge); ``oracle=False`` is EL-Local (each node samples
   from its partial view only).
+
+**In-graph variants** (``InGraph*``) additionally expose the contract the
+compiled superstep engine (:class:`repro.dlrt.CompiledSuperstep`) traces
+into its ``lax.scan`` body (DESIGN.md §7):
+
+* ``in_graph = True`` — marks the strategy as scan-capable;
+* ``needs_sim`` — whether the engine must maintain the [n, n] similarity
+  cache (recomputed every ``sim_every`` rounds under ``lax.cond``);
+* ``init_graph_state()`` — the strategy's device-resident state pytree
+  (carried through the scan; ``()`` for stateless strategies);
+* ``graph_round(gstate, rnd, sim)`` — one round *inside jit*: returns
+  ``(gstate, edges, w)`` with ``rnd`` a traced scalar.
+
+Each in-graph variant also implements the host ``round_edges`` API by
+driving the *same* jitted ``graph_round`` one round at a time, so the
+conformance tests can pit the per-round host loop against the fused scan
+on identical trajectories.
 """
 from __future__ import annotations
 
@@ -23,42 +40,100 @@ from . import mixing, topology
 
 
 class InGraphMorphStrategy:
-    """Host-facing adapter around the jit-compiled Morph controller
-    (:func:`repro.core.morph.update_topology`) so the TPU-native
-    formulation can be driven by the strategy-agnostic runners — in
-    particular the event-driven :class:`repro.netsim.AsyncRunner`."""
+    """Adapter around the jit-compiled Morph controller
+    (:func:`repro.core.morph.update_topology`) — the TPU-native
+    formulation, drivable three ways: per-round by the host runners
+    (``round_edges``), event-driven by :class:`repro.netsim.AsyncRunner`,
+    and fused into a ``lax.scan`` by the compiled superstep engine
+    (``init_graph_state`` / ``graph_round``).
+
+    Similarity semantics: the Eq.-3 matrix is (re)computed whenever fresh
+    stacked params are offered (``compute_sim``) and *cached*; negotiations
+    consume the cached matrix.  This is exactly the compiled engine's
+    ``sim_every`` cadence, so host and scan trajectories coincide.
+    """
 
     uniform_mixing = True
     needs_params = True       # negotiates on the actual stacked models
+    in_graph = True
+    needs_sim = True
 
     def __init__(self, n: int, k: int, view_size: Optional[int] = None,
-                 beta: float = 500.0, delta_r: int = 5, seed: int = 0):
+                 beta: float = 500.0, delta_r: int = 5, seed: int = 0,
+                 sim_fn=None):
         import jax
         import jax.numpy as jnp
-        from .morph import init_state, update_topology
+        from .morph import init_state
+        from .similarity import pairwise_model_similarity
         self.name = "morph-ingraph"
         self.n, self.k = n, k
         self.view_size = view_size if view_size is not None else k + 2
         self.beta, self.delta_r = beta, delta_r
+        self.sim_fn = sim_fn or pairwise_model_similarity
         ring = np.roll(np.eye(n, dtype=bool), 1, axis=1) \
             | np.roll(np.eye(n, dtype=bool), -1, axis=1)
         self.state = init_state(jax.random.PRNGKey(seed), jnp.asarray(ring))
-        self._update = update_topology
+        self._sim_cache: Optional[jnp.ndarray] = None
         self._edges: Optional[np.ndarray] = None
         self._w: Optional[np.ndarray] = None
+        self._jit_round = jax.jit(self.graph_round)
+        self._jit_sim = jax.jit(self.compute_sim)
+
+    # -- scan-capable surface ---------------------------------------------
+
+    def init_graph_state(self):
+        return self.state
+
+    def set_graph_state(self, gstate, sim=None):
+        """Adopt the state a compiled superstep evolved, so a follow-up
+        host-path run (or introspection) continues where the scan left
+        off instead of from the bootstrap ring."""
+        import numpy as np
+        self.state = gstate
+        self._edges = np.asarray(gstate.edges)
+        self._w = mixing.uniform_weights(self._edges)
+        if sim is not None:
+            self._sim_cache = sim
+
+    def compute_sim(self, stacked_params):
+        """Eq.-3 similarity matrix for the engine's ``sim_every`` cache."""
+        import jax.numpy as jnp
+        return self.sim_fn(stacked_params).astype(jnp.float32)
+
+    def graph_round(self, gstate, rnd, sim):
+        """One round inside jit: negotiate every ``delta_r`` rounds (on the
+        cached similarity matrix), reuse the held edges otherwise."""
+        import jax
+        from .morph import update_topology
+
+        def negotiate(st):
+            new_st, w = update_topology(
+                st, None, k=min(self.k, self.n - 1),
+                view_size=min(self.view_size, self.n - 1), beta=self.beta,
+                sim_fn=lambda _: sim)
+            return new_st, new_st.edges, w
+
+        def reuse(st):
+            return st, st.edges, mixing.uniform_weights_jax(st.edges)
+
+        return jax.lax.cond(rnd % self.delta_r == 0, negotiate, reuse,
+                            gstate)
+
+    # -- host strategy surface --------------------------------------------
 
     def round_edges(self, rnd: int, stacked_params=None):
         import jax
         import jax.numpy as jnp
-        if self._edges is None or rnd % self.delta_r == 0:
-            if stacked_params is None:
-                raise ValueError("in-graph Morph needs stacked params on "
-                                 "negotiation rounds")
+        if stacked_params is not None:
             stacked = jax.tree_util.tree_map(jnp.asarray, stacked_params)
-            self.state, w = self._update(
-                self.state, stacked, k=min(self.k, self.n - 1),
-                view_size=min(self.view_size, self.n - 1), beta=self.beta)
-            self._edges = np.asarray(self.state.edges)
+            self._sim_cache = self._jit_sim(stacked)
+        if self._edges is None or rnd % self.delta_r == 0:
+            if self._sim_cache is None:
+                raise ValueError("in-graph Morph needs stacked params "
+                                 "before its first negotiation round")
+            self.state, edges, w = self._jit_round(
+                self.state, jnp.asarray(rnd), self._sim_cache)
+            self._edges = np.asarray(edges)
             self._w = np.asarray(w)
         return self._edges, self._w
 
@@ -127,3 +202,89 @@ class EpidemicStrategy:
         view = None if self.oracle else self.view
         edges = topology.random_out_regular(self.n, self.k, self._rng, view)
         return edges, mixing.uniform_weights(edges)
+
+
+# ---------------------------------------------------------------------------
+# Scan-capable (in-graph) variants for the compiled superstep engine.
+# ---------------------------------------------------------------------------
+
+class InGraphStaticStrategy(StaticStrategy):
+    """Static baseline with a scan-capable surface: the fixed graph and MH
+    weights become jit constants closed over by ``graph_round``."""
+
+    in_graph = True
+    needs_sim = False
+    needs_params = False
+
+    def __post_init__(self):
+        super().__post_init__()
+        self.name = "static-mh-ingraph"
+
+    def init_graph_state(self):
+        return ()
+
+    def graph_round(self, gstate, rnd, sim):
+        import jax.numpy as jnp
+        return gstate, jnp.asarray(self._edges), \
+            jnp.asarray(self._w, jnp.float32)
+
+
+class InGraphFullyConnectedStrategy(FullyConnectedStrategy):
+    in_graph = True
+    needs_sim = False
+    needs_params = False
+
+    def __post_init__(self):
+        super().__post_init__()
+        self.name = "fully-connected-ingraph"
+
+    def init_graph_state(self):
+        return ()
+
+    def graph_round(self, gstate, rnd, sim):
+        import jax.numpy as jnp
+        return gstate, jnp.asarray(self._edges), \
+            jnp.asarray(self._w, jnp.float32)
+
+
+class InGraphEpidemicStrategy:
+    """EL-Oracle with device RNG: each node sends to ``k`` uniformly random
+    peers, drawn per round with ``fold_in(key, rnd)`` so the edge sequence
+    is a pure function of (seed, rnd) — identical whether rounds run one at
+    a time on the host or fused inside the scan."""
+
+    name = "el-oracle-ingraph"
+    uniform_mixing = True
+    needs_params = False
+    in_graph = True
+    needs_sim = False
+
+    def __init__(self, n: int, k: int, seed: int = 0):
+        import jax
+        self.n, self.k = n, k
+        self.key = jax.random.PRNGKey(seed)
+        self._jit_round = jax.jit(self.graph_round)
+
+    def init_graph_state(self):
+        return self.key
+
+    def graph_round(self, gstate, rnd, sim):
+        import jax
+        import jax.numpy as jnp
+        from .selection import NEG_INF
+        n, k = self.n, min(self.k, self.n - 1)
+        eye = jnp.eye(n, dtype=bool)
+        gum = jax.random.gumbel(jax.random.fold_in(gstate, rnd),
+                                (n, n), jnp.float32)
+        # row j = sender j's scores over receivers; top-k without self.
+        scores = jnp.where(~eye, gum, NEG_INF)
+        _, idx = jax.lax.top_k(scores, k)
+        out = jnp.zeros((n, n), bool).at[
+            jnp.arange(n)[:, None], idx].set(True)
+        edges = out.T                       # edges[i, j]: j sends to i
+        return gstate, edges, mixing.uniform_weights_jax(edges)
+
+    def round_edges(self, rnd: int, stacked_params=None):
+        import jax.numpy as jnp
+        _, edges, w = self._jit_round(self.key, jnp.asarray(rnd), None)
+        return np.asarray(edges), np.asarray(w)

@@ -94,12 +94,23 @@ def deferred_acceptance(prefs: Sequence[Sequence[int]],
 # In-graph (jit-safe) matching.
 # ---------------------------------------------------------------------------
 
-def _masked_rank(scores: jax.Array, mask: jax.Array) -> jax.Array:
-    """Rank (0 = best) of each masked entry among masked entries, rows."""
-    masked = jnp.where(mask, scores, NEG_INF)
-    order = jnp.argsort(-masked, axis=-1)
-    ranks = jnp.argsort(order, axis=-1)
-    return jnp.where(mask, ranks, scores.shape[-1])
+def _masked_topk(scores: jax.Array, mask: jax.Array, k: int,
+                 quota: jax.Array | None = None) -> jax.Array:
+    """Boolean mask of each row's best ``k`` masked entries (per-row
+    ``quota`` may lower k).  ``lax.top_k`` is stable (ties go to the lower
+    index), so this selects exactly the entries a stable descending rank
+    would.  O(n·k) per row — the matching sweeps run dozens of times per
+    negotiation inside the superstep scan, so an argsort-based ranking
+    (O(n^2 log n) with XLA's large sort constant) dominated whole-round
+    cost at n=100 before this.
+    """
+    n = scores.shape[-1]
+    _, idx = jax.lax.top_k(jnp.where(mask, scores, NEG_INF), k)
+    ok = jnp.take_along_axis(mask, idx, axis=-1)        # real candidates only
+    if quota is not None:
+        ok &= jnp.arange(k)[None] < quota
+    rows = jnp.arange(n)[:, None]
+    return jnp.zeros_like(mask).at[rows, idx].max(ok)
 
 
 def match_jax(recv_scores: jax.Array,
@@ -122,29 +133,39 @@ def match_jax(recv_scores: jax.Array,
     if rounds is None:
         # the paper's ceil((n-1)/k) bound describes the *message* rounds;
         # the dense parallel formulation can need up to n propose/keep
-        # sweeps to quiesce (each sweep settles >= 1 edge) — still O(n^3)
-        # bool work total, negligible at DL population sizes.
+        # sweeps to quiesce in the worst case (each sweep settles >= 1
+        # edge).  The while_loop below exits at the fixpoint — typically
+        # a handful of sweeps — with ``rounds`` as the safety bound.
         rounds = n
     eye = jnp.eye(n, dtype=bool)
     cand = candidate_mask & ~eye
 
-    def body(_, state):
-        accepted, rejected = state
+    def sweep(accepted, rejected):
         # --- receivers propose to their top (k_in - held) fresh candidates.
         avail = cand & ~accepted & ~rejected
         need = k_in - accepted.sum(axis=1, keepdims=True)
-        rank = _masked_rank(recv_scores, avail)
-        proposals = avail & (rank < need)
+        proposals = _masked_topk(recv_scores, avail, k_in, quota=need)
         # --- senders keep their top-k_out among held + proposals.
         pool = accepted | proposals                    # [recv, send]
-        pool_t = pool.T                                # [send, recv]
-        send_rank = _masked_rank(send_scores, pool_t)  # rank over receivers
-        keep_t = pool_t & (send_rank < k_out)
+        keep_t = _masked_topk(send_scores, pool.T, k_out)
         new_accepted = keep_t.T
         new_rejected = rejected | (pool & ~new_accepted)
         return new_accepted, new_rejected
 
+    def cond(state):
+        _, _, changed, it = state
+        return changed & (it < rounds)
+
+    def body(state):
+        accepted, rejected, _, it = state
+        new_accepted, new_rejected = sweep(accepted, rejected)
+        changed = jnp.any(new_accepted != accepted) \
+            | jnp.any(new_rejected != rejected)
+        return new_accepted, new_rejected, changed, it + 1
+
     accepted0 = jnp.zeros((n, n), bool)
     rejected0 = jnp.zeros((n, n), bool)
-    accepted, _ = jax.lax.fori_loop(0, rounds, body, (accepted0, rejected0))
+    accepted, _, _, _ = jax.lax.while_loop(
+        cond, body, (accepted0, rejected0, jnp.asarray(True),
+                     jnp.asarray(0)))
     return accepted

@@ -137,6 +137,13 @@ def update_topology(state: MorphGraphState,
     edges = match_jax(recv_pref, send_pref, want | fallback, k, k,
                       match_rounds)
 
+    # --- every matched edge delivers a model this round, so the receiver
+    # takes a direct Eq. 3 measurement on it (protocol: receive_model) —
+    # without this, freshly matched edges would keep stale transitive
+    # estimates until the *next* negotiation.
+    sim = jnp.where(edges, true_sim, sim)
+    sim_valid = sim_valid | edges
+
     # --- gossip discovery: receiving from j teaches i everything j knows.
     reach = (edges.astype(jnp.int32) @
              (state.known | eye).astype(jnp.int32)) > 0

@@ -150,7 +150,11 @@ class MorphProtocol:
             deg = min(max(cfg.k, 2), n - 1)
             if (n * deg) % 2:
                 deg += 1
-            initial_adj = topology.random_regular_graph(n, deg, self._rng)
+            # The bootstrap overlay must be connected: partial views grow
+            # only along messages, so a disconnected bootstrap splits the
+            # population into absorbing components no protocol can merge.
+            initial_adj = topology.random_regular_graph(
+                n, deg, self._rng, connected=True)
         self.nodes: List[MorphNodeState] = []
         for i in range(n):
             st = MorphNodeState(nid=i)

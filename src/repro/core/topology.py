@@ -22,25 +22,35 @@ import numpy as np
 
 def random_regular_graph(n: int, degree: int,
                          rng: np.random.Generator,
-                         max_tries: int = 200) -> np.ndarray:
+                         max_tries: int = 200,
+                         connected: bool = False) -> np.ndarray:
     """Undirected ``degree``-regular random graph (paper's initial 3/7-
     regular topologies).
 
     Uses networkx's pairing-with-repair sampler (the plain configuration
     model with whole-graph rejection fails for d >= 7 at n = 100).
     Returns a symmetric boolean adjacency matrix without self-loops.
+
+    ``connected=True`` resamples until the graph is connected.  Low-degree
+    regular graphs are frequently a union of disjoint cycles (d=2 always
+    is), and a protocol whose knowledge travels only along edges can never
+    bridge components — bootstrap overlays must ask for connectivity.
     """
     if n * degree % 2 != 0:
         raise ValueError("n * degree must be even for a regular graph")
     if degree >= n:
         raise ValueError("degree must be < n")
     import networkx as nx
-    g = nx.random_regular_graph(degree, n,
-                                seed=int(rng.integers(2**31 - 1)))
-    adj = np.zeros((n, n), bool)
-    for a, b in g.edges:
-        adj[a, b] = adj[b, a] = True
-    return adj
+    for _ in range(max_tries):
+        g = nx.random_regular_graph(degree, n,
+                                    seed=int(rng.integers(2**31 - 1)))
+        adj = np.zeros((n, n), bool)
+        for a, b in g.edges:
+            adj[a, b] = adj[b, a] = True
+        if not connected or is_connected(adj):
+            return adj
+    raise RuntimeError(f"no connected {degree}-regular graph on {n} nodes "
+                       f"after {max_tries} tries")
 
 
 def random_out_regular(n: int, k: int, rng: np.random.Generator,

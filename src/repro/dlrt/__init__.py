@@ -1,4 +1,5 @@
 """Decentralized-learning runtime: round loop, metrics, pjit distribution."""
+from .compiled import CompiledSuperstep, eval_boundaries
 from .distributed import (MorphHParams, TrainState, abstract_train_state,
                           batch_sharding, cache_sharding, init_train_state,
                           leaf_spec, make_serve_step, make_train_step,
@@ -8,7 +9,8 @@ from .metrics import (MetricsLog, NetMetricsLog, NetRecord, RoundRecord,
                       internode_variance)
 from .runtime import DecentralizedRunner, RunnerConfig
 
-__all__ = ["MorphHParams", "TrainState", "abstract_train_state",
+__all__ = ["CompiledSuperstep", "eval_boundaries",
+           "MorphHParams", "TrainState", "abstract_train_state",
            "batch_sharding", "cache_sharding", "init_train_state",
            "leaf_spec", "make_serve_step", "make_train_step", "node_axes",
            "params_sharding", "replicated", "train_state_sharding",

@@ -1,0 +1,184 @@
+"""Compiled superstep engine: whole Morph rounds fused into ``lax.scan``.
+
+The host runner (:class:`repro.dlrt.DecentralizedRunner`) syncs to the
+host every round — strategy on host, mixing on device — so large sweeps
+are dominated by dispatch and ``device_get`` overhead rather than the MXU
+kernels.  This engine runs **K rounds in one jitted program**:
+
+  scan step r:  vmapped local SGD
+                -> similarity cache refresh      [lax.cond, sim_every]
+                -> strategy.graph_round          [lax.cond, delta_r]
+                -> row-stochastic mixing         [apply_mixing or the
+                                                  fused Pallas kernel]
+
+with the strategy state (:class:`repro.core.MorphGraphState` for Morph, a
+PRNG key for Epidemic, ``()`` for the static baselines) carried through
+the scan and **zero host round-trips inside a chunk**.  Per-round in-edge
+matrices come back as one stacked ``[K, n, n]`` bool array (the only scan
+output) and are decoded on exit into ``edge_history`` / comm-bytes /
+:class:`RoundRecord` entries — the same ``MetricsLog`` the host runner
+produces.
+
+Chunking: evaluation rounds (``eval_every`` cadence plus the final round)
+form the chunk boundaries, so the engine evaluates exactly where the host
+runner does and the two paths emit identical logs.  See DESIGN.md §7 for
+the layout and for when the host path is still required (protocol-level
+message-faithful runs, netsim).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import apply_mixing
+from ..data.pipeline import StackedBatcher
+from ..kernels import ops
+from ..optim import Optimizer
+from .metrics import MetricsLog, RoundRecord
+from .runtime import (RunnerConfig, make_evaluator, make_local_step,
+                      make_round_record, stacked_model_bytes)
+
+
+def eval_boundaries(rounds: int, eval_every: int) -> List[Tuple[int, int]]:
+    """Inclusive ``(start, end)`` chunks whose ends are exactly the rounds
+    after which the host runner evaluates."""
+    ends = sorted({r for r in range(rounds) if r % eval_every == 0}
+                  | {rounds - 1})
+    chunks, start = [], 0
+    for e in ends:
+        chunks.append((start, e))
+        start = e + 1
+    return chunks
+
+
+class CompiledSuperstep:
+    """Runs an in-graph-capable :class:`TopologyStrategy` (one exposing
+    ``init_graph_state`` / ``graph_round``) in fused K-round supersteps.
+
+    ``use_pallas`` routes similarity through the blocked Gram kernel and
+    uniform mixing through the fused masked-mix kernel (``interpret=True``
+    to execute their bodies on CPU); the default pure-jnp path is what the
+    conformance tests pit against the host loop bit-for-bit.
+    """
+
+    def __init__(self, *, init_fn: Callable, loss_fn: Callable,
+                 eval_fn: Callable, optimizer: Optimizer,
+                 batcher: StackedBatcher, test_batch: Dict[str, np.ndarray],
+                 strategy, cfg: RunnerConfig,
+                 use_pallas: bool = False, interpret: bool = False,
+                 block_d: Optional[int] = None,
+                 params=None, opt_state=None):
+        if not getattr(strategy, "in_graph", False):
+            raise TypeError(
+                f"strategy {getattr(strategy, 'name', strategy)!r} has no "
+                "in-graph surface (init_graph_state/graph_round); use the "
+                "host DecentralizedRunner for protocol-level strategies")
+        self.cfg = cfg
+        self.strategy = strategy
+        self.batcher = batcher
+        self.test_batch = {k: jnp.asarray(v) for k, v in test_batch.items()}
+        if params is None:
+            keys = jax.random.split(jax.random.PRNGKey(cfg.seed),
+                                    cfg.n_nodes)
+            params = jax.vmap(init_fn)(keys)
+            opt_state = jax.vmap(optimizer.init)(params)
+        self.params = params
+        self.opt_state = opt_state
+        self.opt = optimizer
+        self.log = MetricsLog()
+        self.edge_history: list = []
+        self._comm_bytes = 0
+        self._model_bytes = cfg.model_bytes \
+            or stacked_model_bytes(self.params, cfg.n_nodes)
+
+        self.gstate = strategy.init_graph_state()
+        n = cfg.n_nodes
+        self.sim = jnp.zeros((n, n), jnp.float32)
+        needs_sim = bool(getattr(strategy, "needs_sim", False))
+        uniform = bool(getattr(strategy, "uniform_mixing", False))
+        if not needs_sim:
+            sim_fn = None
+        elif use_pallas:
+            sim_fn = lambda p: ops.model_pairwise_cosine(
+                p, block_d=block_d, interpret=interpret)
+        else:
+            sim_fn = strategy.compute_sim
+
+        local_step = make_local_step(loss_fn, optimizer)
+
+        def round_body(carry, xs):
+            params, opt_state, gstate, sim = carry
+            rnd, batch = xs
+            params, opt_state = local_step(params, opt_state, batch)
+            if sim_fn is not None:
+                sim = jax.lax.cond(rnd % cfg.sim_every == 0,
+                                   lambda p, s: sim_fn(p).astype(jnp.float32),
+                                   lambda p, s: s,
+                                   params, sim)
+            gstate, edges, w = strategy.graph_round(gstate, rnd, sim)
+            if use_pallas and uniform:
+                params = ops.mix_masked_pytree(edges, params,
+                                               block_d=block_d,
+                                               interpret=interpret)
+            elif use_pallas:
+                params = ops.mix_pytree(w.astype(jnp.float32), params,
+                                        block_d=block_d, interpret=interpret)
+            else:
+                params = apply_mixing(w.astype(jnp.float32), params)
+            return (params, opt_state, gstate, sim), edges
+
+        @jax.jit
+        def superstep(carry, rnds, batches):
+            return jax.lax.scan(round_body, carry, (rnds, batches))
+
+        self._superstep = superstep
+        self._evaluate = jax.jit(make_evaluator(eval_fn))
+
+    # ------------------------------------------------------------------
+
+    def _run_chunk(self, start: int, end: int) -> np.ndarray:
+        """Execute rounds ``[start, end]`` as one on-device superstep and
+        decode the stacked per-round edge matrices."""
+        k = end - start + 1
+        host_batches = [self.batcher.next() for _ in range(k)]
+        batches = {key: jnp.asarray(np.stack([b[key] for b in host_batches]))
+                   for key in host_batches[0]}
+        rnds = jnp.arange(start, end + 1)
+        carry = (self.params, self.opt_state, self.gstate, self.sim)
+        carry, edges_stack = self._superstep(carry, rnds, batches)
+        self.params, self.opt_state, self.gstate, self.sim = carry
+        if hasattr(self.strategy, "set_graph_state"):
+            self.strategy.set_graph_state(self.gstate, self.sim)
+        edges_np = np.asarray(edges_stack, bool)
+        self.edge_history.extend(edges_np)
+        self._comm_bytes += int(edges_np.sum()) * self._model_bytes
+        return edges_np
+
+    def evaluate(self, rnd: int, edges: np.ndarray) -> RoundRecord:
+        losses, metrics = self._evaluate(self.params, self.test_batch)
+        rec = make_round_record(rnd, losses, metrics, self._comm_bytes,
+                                edges)
+        self.log.add(rec)
+        return rec
+
+    def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
+            ) -> MetricsLog:
+        for start, end in eval_boundaries(self.cfg.rounds,
+                                          self.cfg.eval_every):
+            edges_np = self._run_chunk(start, end)
+            rec = self.evaluate(end, edges_np[-1])
+            if progress is not None:
+                progress(rec)
+        return self.log
+
+    def run_steps(self, rounds: int, chunk: int) -> None:
+        """Throughput mode: run ``rounds`` rounds in fixed-size supersteps
+        with no evaluation — the fig9 benchmark loop."""
+        start = 0
+        while start < rounds:
+            end = min(start + chunk, rounds) - 1
+            self._run_chunk(start, end)
+            start = end + 1

@@ -38,6 +38,54 @@ class RunnerConfig:
                                            # actual param bytes)
     sim_every: int = 1                     # recompute stacked sims every r
     seed: int = 0
+    # Compiled-superstep dispatch (dlrt.compiled): None = auto (use the
+    # fused lax.scan engine whenever the strategy is in-graph-capable),
+    # True = require it, False = force the per-round host loop.
+    compiled: Optional[bool] = None
+    use_pallas: bool = False               # Pallas sim + fused mixing
+    interpret: bool = False                # Pallas interpret mode (CPU)
+    block_d: Optional[int] = None          # kernel D-block override
+
+
+def make_local_step(loss_fn: Callable, optimizer: Optimizer) -> Callable:
+    """Vmapped per-node SGD step — the same traced function whether it
+    runs per round (host loop) or inside the superstep scan."""
+    def local_step(params, opt_state, batch):
+        def one(p, s, b):
+            grads = jax.grad(lambda q: loss_fn(q, b)[0])(p)
+            upd, s = optimizer.update(grads, s, p)
+            return apply_updates(p, upd), s
+        return jax.vmap(one)(params, opt_state, batch)
+    return local_step
+
+
+def make_evaluator(eval_fn: Callable) -> Callable:
+    def evaluate(params, test):
+        return jax.vmap(lambda p: eval_fn(p, test))(params)
+    return evaluate
+
+
+def stacked_model_bytes(params, n_nodes: int) -> int:
+    """Per-transfer payload: one node's slice of the stacked params."""
+    return sum(x.nbytes // n_nodes
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def make_round_record(rnd: int, losses, metrics, comm_bytes: int,
+                      edges: np.ndarray) -> RoundRecord:
+    """§IV-A4 metrics for one evaluation point — the single constructor
+    both the host loop and the compiled engine decode into, so their
+    logs cannot drift apart field by field."""
+    acc = np.asarray(metrics["accuracy"])
+    return RoundRecord(
+        rnd=rnd,
+        mean_accuracy=float(acc.mean()),
+        mean_loss=float(np.asarray(losses).mean()),
+        internode_variance=internode_variance(acc),
+        comm_bytes=comm_bytes,
+        isolated=len(isolated_nodes(edges)),
+        per_node_accuracy=acc,
+    )
 
 
 class DecentralizedRunner:
@@ -60,32 +108,16 @@ class DecentralizedRunner:
         self.log = MetricsLog()
         self.edge_history: list = []       # per-round in-edge matrices
         self._comm_bytes = 0
-        self._model_bytes = cfg.model_bytes or sum(
-            x.nbytes // cfg.n_nodes
-            for x in jax.tree_util.tree_leaves(self.params))
-
-        @jax.jit
-        def local_step(params, opt_state, batch):
-            def one(p, s, b):
-                grads = jax.grad(lambda q: self._loss_fn(q, b)[0])(p)
-                upd, s = self.opt.update(grads, s, p)
-                return apply_updates(p, upd), s
-            return jax.vmap(one)(params, opt_state, batch)
+        self._model_bytes = cfg.model_bytes \
+            or stacked_model_bytes(self.params, cfg.n_nodes)
 
         @jax.jit
         def mix(params, w):
             return apply_mixing(w, params)
 
-        @jax.jit
-        def evaluate(params, test):
-            def one(p):
-                loss, m = self._eval_fn(p, test)
-                return loss, m
-            return jax.vmap(one)(params)
-
-        self._local_step = local_step
+        self._local_step = jax.jit(make_local_step(loss_fn, optimizer))
         self._mix = mix
-        self._evaluate = evaluate
+        self._evaluate = jax.jit(make_evaluator(eval_fn))
 
     # ------------------------------------------------------------------
 
@@ -103,21 +135,37 @@ class DecentralizedRunner:
 
     def evaluate(self, rnd: int, edges: np.ndarray) -> RoundRecord:
         losses, metrics = self._evaluate(self.params, self.test_batch)
-        acc = np.asarray(metrics["accuracy"])
-        rec = RoundRecord(
-            rnd=rnd,
-            mean_accuracy=float(acc.mean()),
-            mean_loss=float(np.asarray(losses).mean()),
-            internode_variance=internode_variance(acc),
-            comm_bytes=self._comm_bytes,
-            isolated=len(isolated_nodes(edges)),
-            per_node_accuracy=acc,
-        )
+        rec = make_round_record(rnd, losses, metrics, self._comm_bytes,
+                                edges)
         self.log.add(rec)
         return rec
 
+    def _make_engine(self):
+        """Build the fused lax.scan engine sharing this runner's live
+        params/optimizer state (dlrt.compiled; imported lazily — it
+        imports RunnerConfig from here)."""
+        from .compiled import CompiledSuperstep
+        return CompiledSuperstep(
+            init_fn=None, loss_fn=self._loss_fn, eval_fn=self._eval_fn,
+            optimizer=self.opt, batcher=self.batcher,
+            test_batch=self.test_batch, strategy=self.strategy,
+            cfg=self.cfg, use_pallas=self.cfg.use_pallas,
+            interpret=self.cfg.interpret, block_d=self.cfg.block_d,
+            params=self.params, opt_state=self.opt_state)
+
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
             ) -> MetricsLog:
+        use_compiled = self.cfg.compiled
+        if use_compiled is None:
+            use_compiled = getattr(self.strategy, "in_graph", False)
+        if use_compiled:
+            engine = self._make_engine()
+            log = engine.run(progress)
+            self.params, self.opt_state = engine.params, engine.opt_state
+            self.edge_history = engine.edge_history
+            self._comm_bytes = engine._comm_bytes
+            self.log = log
+            return log
         edges = np.zeros((self.cfg.n_nodes, self.cfg.n_nodes), bool)
         for rnd in range(self.cfg.rounds):
             edges = self._round(rnd)

@@ -3,6 +3,16 @@
 Handle padding to block multiples, dtype policy, pytree flattening and
 the Eq.-3 layer averaging.  On CPU (this container) pass
 ``interpret=True``; on TPU the same calls compile to Mosaic.
+
+Padding policy (the shapes the compiled superstep engine actually feeds):
+
+* **D** is padded with zero columns up to a multiple of ``block_d`` —
+  zero columns contribute nothing to Gram/mix contractions;
+* **n** is padded with zero rows up to a multiple of the sublane tile
+  (8 for f32, 16 for bf16) so the ``[n, n]`` / ``[n, block_d]`` blocks
+  are Mosaic-tileable for any population size.  Padded rows produce
+  garbage rows in the output, which the wrappers slice away before
+  returning — callers always see exact ``[n, n]`` / ``[n, D]`` results.
 """
 from __future__ import annotations
 
@@ -18,12 +28,28 @@ from .pairwise_cosine import gram_matrix
 _EPS = 1e-12
 
 
+def _sublane(dtype) -> int:
+    return 16 if dtype in (jnp.bfloat16, jnp.float16) else 8
+
+
 def _pad_d(x: jax.Array, block_d: int) -> jax.Array:
     d = x.shape[-1]
     rem = d % block_d
     if rem == 0:
         return x
     return jnp.pad(x, ((0, 0), (0, block_d - rem)))
+
+
+def _pad_n(x: jax.Array, mult: int, axes=(0,)) -> jax.Array:
+    """Zero-pad the node axis (or axes) of ``x`` up to a multiple of
+    ``mult``."""
+    n = x.shape[0]
+    rem = n % mult
+    if rem == 0:
+        return x
+    width = [(0, mult - rem) if a in axes else (0, 0)
+             for a in range(x.ndim)]
+    return jnp.pad(x, width)
 
 
 def _pick_block(d: int, block_d: Optional[int]) -> int:
@@ -36,8 +62,10 @@ def _pick_block(d: int, block_d: Optional[int]) -> int:
 def pairwise_cosine(x: jax.Array, *, block_d: Optional[int] = None,
                     interpret: bool = False) -> jax.Array:
     """Cosine similarity between all rows of ``X [n, D]`` -> [n, n]."""
+    n = x.shape[0]
     bd = _pick_block(x.shape[-1], block_d)
-    g = gram_matrix(_pad_d(x, bd), block_d=bd, interpret=interpret)
+    xp = _pad_n(_pad_d(x, bd), _sublane(x.dtype))
+    g = gram_matrix(xp, block_d=bd, interpret=interpret)[:n, :n]
     norms = jnp.maximum(jnp.sqrt(jnp.diag(g)), _EPS)
     return g / (norms[:, None] * norms[None, :])
 
@@ -60,11 +88,14 @@ def model_pairwise_cosine(stacked_params, *, block_d: Optional[int] = None,
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def mix(w: jax.Array, x: jax.Array, *, block_d: Optional[int] = None,
         interpret: bool = False) -> jax.Array:
-    """``W @ X`` with D-blocking; pads/unpads D transparently."""
-    d = x.shape[-1]
+    """``W @ X`` with D-blocking; pads/unpads n and D transparently."""
+    n, d = x.shape
     bd = _pick_block(d, block_d)
-    y = graph_mix(w, _pad_d(x, bd), block_d=bd, interpret=interpret)
-    return y[:, :d]
+    sl = _sublane(x.dtype)
+    wp = _pad_n(w, sl, axes=(0, 1))
+    xp = _pad_n(_pad_d(x, bd), sl)
+    y = graph_mix(wp, xp, block_d=bd, interpret=interpret)
+    return y[:n, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
@@ -72,19 +103,36 @@ def mix_masked(edges: jax.Array, x: jax.Array, *,
                block_d: Optional[int] = None,
                interpret: bool = False) -> jax.Array:
     """Fused uniform-average mixing from the raw in-edge matrix."""
-    d = x.shape[-1]
+    n, d = x.shape
     bd = _pick_block(d, block_d)
-    y = graph_mix_masked(edges, _pad_d(x, bd), block_d=bd,
-                         interpret=interpret)
-    return y[:, :d]
+    sl = _sublane(x.dtype)
+    ep = _pad_n(edges, sl, axes=(0, 1))
+    xp = _pad_n(_pad_d(x, bd), sl)
+    y = graph_mix_masked(ep, xp, block_d=bd, interpret=interpret)
+    return y[:n, :d]
 
 
-def mix_pytree(w: jax.Array, stacked_params, *, interpret: bool = False):
+def mix_pytree(w: jax.Array, stacked_params, *,
+               block_d: Optional[int] = None, interpret: bool = False):
     """Apply ``W`` to every leaf of a node-stacked pytree via the kernel
     (host-layout path; the sharded runtime uses core.mixing.apply_mixing)."""
     def one(leaf):
         n = leaf.shape[0]
         flat = leaf.reshape(n, -1)
-        return mix(w, flat, interpret=interpret).reshape(
+        return mix(w, flat, block_d=block_d, interpret=interpret).reshape(
+            leaf.shape).astype(leaf.dtype)
+    return jax.tree_util.tree_map(one, stacked_params)
+
+
+def mix_masked_pytree(edges: jax.Array, stacked_params, *,
+                      block_d: Optional[int] = None,
+                      interpret: bool = False):
+    """Fused uniform-average mixing over a node-stacked pytree — the
+    compiled superstep's Pallas mixing path for uniform strategies."""
+    def one(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        return mix_masked(edges, flat, block_d=block_d,
+                          interpret=interpret).reshape(
             leaf.shape).astype(leaf.dtype)
     return jax.tree_util.tree_map(one, stacked_params)

@@ -3,8 +3,7 @@ in-graph implementations."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import deferred_acceptance, match_jax
 

@@ -154,6 +154,7 @@ def _params_equal(a, b):
                                jax.tree_util.tree_leaves(b)))
 
 
+@pytest.mark.slow
 def test_async_zero_latency_matches_sync_morph():
     """Acceptance criterion: the synchronous runner is the zero-latency /
     zero-churn special case of the event-driven runner, bit for bit."""
@@ -176,6 +177,7 @@ def test_async_zero_latency_matches_sync_morph():
     assert sync.strategy.similarity_floats == asyn.strategy.similarity_floats
 
 
+@pytest.mark.slow
 def test_async_zero_latency_matches_sync_epidemic():
     n, rounds = 6, 8
     tr, te, parts = _experiment(n)

@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (random_injection, sample_gumbel_topk,
                         sample_sequential, softmax_logits,

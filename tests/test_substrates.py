@@ -6,8 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
 from repro.data import (StackedBatcher, TokenBatcher, by_writer_partition,

@@ -1,0 +1,186 @@
+"""Compiled superstep engine vs the per-round host runner.
+
+The headline contract (mirroring PR 1's async-vs-sync equivalence): for
+the same seed, an in-graph-capable strategy produces the *same
+trajectory* whether its rounds run one at a time through
+``DecentralizedRunner``'s host loop or fused into ``lax.scan`` by
+``CompiledSuperstep`` — same per-round edge sequence, same parameters
+(allclose at f32 tolerance; the two paths schedule the same f32 ops
+through different XLA programs), same decoded metrics log.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (InGraphEpidemicStrategy,
+                        InGraphFullyConnectedStrategy, InGraphMorphStrategy,
+                        InGraphStaticStrategy, MorphConfig, MorphProtocol)
+from repro.data import (dirichlet_partition, make_image_classification,
+                        train_test_split)
+from repro.data.pipeline import StackedBatcher
+from repro.dlrt import (CompiledSuperstep, DecentralizedRunner,
+                        RunnerConfig, eval_boundaries)
+from repro.optim import sgd
+
+N, ROUNDS = 6, 11                     # covers refreshes at 0, 5, 10
+
+
+def _mlp_params(key, d_in=192, num_classes=4, hidden=8):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (d_in, hidden)) / math.sqrt(d_in),
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, num_classes))
+            / math.sqrt(hidden),
+            "b2": jnp.zeros((num_classes,))}
+
+
+def _mlp_loss(p, batch):
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    logits = h @ p["w2"] + p["b2"]
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], 1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"accuracy": acc}
+
+
+def _runner(strategy, compiled, *, rounds=ROUNDS, sim_every=1,
+            eval_every=5, use_pallas=False, interpret=False):
+    rng = np.random.default_rng(0)
+    ds = make_image_classification(400, num_classes=4, image_size=8, seed=0)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, N, 0.5, rng)
+    return DecentralizedRunner(
+        init_fn=_mlp_params, loss_fn=_mlp_loss, eval_fn=_mlp_loss,
+        optimizer=sgd(0.05),
+        batcher=StackedBatcher(tr, parts, 8, seed=3),
+        test_batch={"images": te.images, "labels": te.labels},
+        strategy=strategy,
+        cfg=RunnerConfig(n_nodes=N, rounds=rounds, eval_every=eval_every,
+                         sim_every=sim_every, compiled=compiled,
+                         use_pallas=use_pallas, interpret=interpret))
+
+
+STRATEGIES = {
+    "morph": lambda: InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+    "static": lambda: InGraphStaticStrategy(n=N, degree=3, seed=0),
+    "fully-connected": lambda: InGraphFullyConnectedStrategy(n=N),
+    "epidemic": lambda: InGraphEpidemicStrategy(n=N, k=2, seed=0),
+}
+
+
+def _assert_conformant(host, comp):
+    assert len(host.edge_history) == len(comp.edge_history)
+    for r, (eh, ec) in enumerate(zip(host.edge_history, comp.edge_history)):
+        assert np.array_equal(eh, ec), f"edge sequence diverged at round {r}"
+    for a, b in zip(jax.tree_util.tree_leaves(host.params),
+                    jax.tree_util.tree_leaves(comp.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert len(host.log.records) == len(comp.log.records)
+    for ra, rb in zip(host.log.records, comp.log.records):
+        assert ra.rnd == rb.rnd
+        assert ra.comm_bytes == rb.comm_bytes
+        assert ra.isolated == rb.isolated
+        assert ra.mean_accuracy == pytest.approx(rb.mean_accuracy,
+                                                 abs=1e-5)
+        assert ra.mean_loss == pytest.approx(rb.mean_loss, abs=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_compiled_matches_host_loop(name):
+    """Acceptance criterion: compiled == host-loop trajectories for all
+    four strategies."""
+    host = _runner(STRATEGIES[name](), compiled=False)
+    host.run()
+    comp = _runner(STRATEGIES[name](), compiled=True)
+    comp.run()
+    _assert_conformant(host, comp)
+
+
+@pytest.mark.parametrize("sim_every", [2, 3])
+def test_compiled_matches_host_loop_sim_every(sim_every):
+    """sim_every > 1: both paths negotiate on the similarity cache from
+    the last sim round."""
+    host = _runner(STRATEGIES["morph"](), compiled=False,
+                   sim_every=sim_every)
+    host.run()
+    comp = _runner(STRATEGIES["morph"](), compiled=True,
+                   sim_every=sim_every)
+    comp.run()
+    _assert_conformant(host, comp)
+
+
+def test_pallas_kernel_path_close_to_jnp_path():
+    """use_pallas swaps the Gram-kernel similarity + fused masked mixing
+    in; trajectories stay numerically close to the pure-jnp scan."""
+    ref = _runner(STRATEGIES["morph"](), compiled=True)
+    ref.run()
+    pal = _runner(STRATEGIES["morph"](), compiled=True,
+                  use_pallas=True, interpret=True)
+    pal.run()
+    for r, (ea, eb) in enumerate(zip(ref.edge_history, pal.edge_history)):
+        assert np.array_equal(ea, eb), f"diverged at round {r}"
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(pal.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_auto_dispatch_and_host_path_kept():
+    """compiled=None auto-detects the in-graph surface; protocol-level
+    strategies stay on the host loop; compiled=True on one rejects."""
+    auto = _runner(STRATEGIES["static"](), compiled=None, rounds=3,
+                   eval_every=10)
+    auto.run()
+    assert len(auto.edge_history) == 3
+    proto = _runner(MorphProtocol(MorphConfig(n=N, k=2, seed=0)),
+                    compiled=None, rounds=3, eval_every=10)
+    proto.run()                       # host path: works fine
+    assert len(proto.edge_history) == 3
+    with pytest.raises(TypeError):
+        bad = _runner(MorphProtocol(MorphConfig(n=N, k=2, seed=0)),
+                      compiled=True, rounds=3)
+        bad.run()
+
+
+def test_compiled_run_writes_graph_state_back():
+    """After a compiled run the strategy carries the evolved controller
+    state (not the bootstrap ring), so a follow-up host-path round — or
+    any introspection — continues where the scan left off."""
+    strat = STRATEGIES["morph"]()
+    before = np.asarray(strat.state.known).copy()
+    runner = _runner(strat, compiled=True)
+    runner.run()
+    after = np.asarray(strat.state.known)
+    assert after.sum() > before.sum()          # gossip actually happened
+    assert np.array_equal(np.asarray(strat.state.edges),
+                          runner.edge_history[-1])
+    # held edges are served to the host API without re-negotiating
+    edges, w = strat.round_edges(ROUNDS)       # ROUNDS % delta_r != 0
+    assert np.array_equal(edges, runner.edge_history[-1])
+
+
+def test_eval_boundaries():
+    assert eval_boundaries(1, 5) == [(0, 0)]
+    assert eval_boundaries(11, 5) == [(0, 0), (1, 5), (6, 10)]
+    assert eval_boundaries(12, 5) == [(0, 0), (1, 5), (6, 10), (11, 11)]
+    assert eval_boundaries(7, 100) == [(0, 0), (1, 6)]
+    chunks = eval_boundaries(40, 10)
+    assert chunks[0] == (0, 0) and chunks[-1][1] == 39
+    covered = [r for s, e in chunks for r in range(s, e + 1)]
+    assert covered == list(range(40))
+
+
+@pytest.mark.slow
+def test_compiled_matches_host_loop_longer_run():
+    """Wider conformance: more rounds, shorter refresh cadence."""
+    strat = lambda: InGraphMorphStrategy(n=N, k=2, view_size=4, seed=1,
+                                         delta_r=3)
+    host = _runner(strat(), compiled=False, rounds=20, eval_every=7)
+    host.run()
+    comp = _runner(strat(), compiled=True, rounds=20, eval_every=7)
+    comp.run()
+    _assert_conformant(host, comp)

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (apply_mixing, connectivity_probability,
                         fully_connected, fully_connected_weights,

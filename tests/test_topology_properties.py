@@ -1,0 +1,157 @@
+"""Topology invariants under random keys/adjacencies.
+
+Each invariant is a ``_check_*`` helper driven two ways: a deterministic
+seed sweep (always runs) and a hypothesis property (widened input space;
+skipped when hypothesis is absent, mirroring the repo's optional-import
+gating).
+
+What is — and deliberately is not — asserted: the college-admission
+matching caps in/out-degree at ``k`` unconditionally, but *exact* in-
+degree k is only guaranteed when sender capacity is slack (with demand
+== capacity the rural-hospitals theorem applies: every stable matching
+leaves the same positions unfilled), so the exact-fill property is
+asserted on ``match_jax`` with uncapped senders.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (init_state, is_row_stochastic, random_regular_graph,
+                        update_topology, update_wanted_senders,
+                        uniform_weights_jax)
+from repro.core.matching import match_jax
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Invariant checkers (pure functions of a seed + sizes).
+# ---------------------------------------------------------------------------
+
+def _check_update_topology(seed: int, n: int, k: int) -> None:
+    rng = np.random.default_rng(seed)
+    deg = min(max(2 * k, 3) + ((n * max(2 * k, 3)) % 2), n - 1)
+    if (n * deg) % 2:
+        deg -= 1
+    adj = jnp.asarray(random_regular_graph(n, deg, rng, connected=True))
+    state = init_state(jax.random.PRNGKey(seed), adj)
+    params = {"w": jnp.asarray(rng.normal(size=(n, 16)), jnp.float32)}
+    for _ in range(3):
+        known_before = np.asarray(state.known)
+        state, w = update_topology(state, params, k=k,
+                                   view_size=min(k + 2, n - 1), beta=200.0)
+        edges = np.asarray(state.edges)
+        known = np.asarray(state.known)
+        assert (edges.sum(axis=1) <= k).all()          # in-degree cap
+        assert (edges.sum(axis=0) <= k).all()          # out-degree cap
+        assert not edges.diagonal().any()
+        assert not known.diagonal().any()
+        # nodes can only pull from peers in their partial view
+        assert not (edges & ~known_before).any()
+        # gossip monotonically grows the known set
+        assert (known | known_before == known).all()
+        assert is_row_stochastic(np.asarray(w, np.float64), atol=1e-5)
+
+
+def _check_exact_fill_uncapped(seed: int, n: int, k: int) -> None:
+    """DA with uncapped senders fills every receiver to min(k, |cand|) —
+    the 'in-degree exactly k' property in the regime where it is a
+    theorem rather than a market outcome."""
+    rng = np.random.default_rng(seed)
+    recv = jnp.asarray(rng.uniform(0, 1, (n, n)))
+    send = jnp.asarray(rng.uniform(0, 1, (n, n)))
+    cand = jnp.asarray(rng.random((n, n)) < 0.6) & ~jnp.eye(n, dtype=bool)
+    edges = np.asarray(match_jax(recv, send, cand, k, n))
+    want = np.minimum(np.asarray(cand).sum(axis=1), k)
+    assert (edges.sum(axis=1) == want).all()
+    assert not (edges & ~np.asarray(cand)).any()
+
+
+def _check_random_injection_view(seed: int, n: int, k: int,
+                                 view_size: int) -> None:
+    """Alg. 3's view: k diversity picks from C_A plus (s-k) random from
+    C \\ C_A — the view size is exactly min(k,|C_A|) + min(s-k,|C\\C_A|),
+    so random injection leaves no node without wanted senders while it
+    knows anyone outside its similarity-measured set."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    sim = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    full = jnp.asarray(rng.random(n) < 0.7).at[0].set(False)
+    local = full & jnp.asarray(rng.random(n) < 0.5)
+    view = np.asarray(update_wanted_senders(key, sim, local, full, k,
+                                            view_size, beta=100.0))
+    n_local = int(np.asarray(local).sum())
+    n_rest = int((np.asarray(full) & ~np.asarray(local)).sum())
+    expect = min(k, n_local) + min(max(view_size - k, 0), n_rest)
+    assert view.sum() == expect
+    assert not (view & ~np.asarray(full)).any()        # view subset of C
+
+
+def _check_row_stochastic(seed: int, n: int) -> None:
+    rng = np.random.default_rng(seed)
+    edges = jnp.asarray(rng.random((n, n)) < 0.3) & ~jnp.eye(n, dtype=bool)
+    w = np.asarray(uniform_weights_jax(edges), np.float64)
+    assert is_row_stochastic(w, atol=1e-6)
+    # isolated rows fall back to self-weight 1
+    for i in np.flatnonzero(np.asarray(edges).sum(axis=1) == 0):
+        assert w[i, i] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic sweeps (always run).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_update_topology_invariants_sweep(seed):
+    _check_update_topology(seed, n=10 + 2 * seed, k=1 + seed % 3)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_exact_fill_uncapped_sweep(seed):
+    _check_exact_fill_uncapped(seed, n=6 + seed, k=1 + seed % 3)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_injection_view_sweep(seed):
+    _check_random_injection_view(seed, n=8 + seed, k=2, view_size=4)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_row_stochastic_sweep(seed):
+    _check_row_stochastic(seed, n=5 + 3 * seed)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-widened properties (skipped without the dependency).
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10 ** 6))
+    def test_update_topology_invariants_prop(seed):
+        # fixed sizes: update_topology retraces per (n, k) combination
+        _check_update_topology(seed, n=12, k=2)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10 ** 6), st.integers(4, 16), st.integers(1, 4))
+    def test_exact_fill_uncapped_prop(seed, n, k):
+        _check_exact_fill_uncapped(seed, n, min(k, n - 1))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10 ** 6), st.integers(4, 20), st.integers(1, 4),
+           st.integers(0, 3))
+    def test_random_injection_view_prop(seed, n, k, extra):
+        k = min(k, n - 1)
+        _check_random_injection_view(seed, n, k,
+                                     min(k + extra, n - 1))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10 ** 6), st.integers(2, 40))
+    def test_row_stochastic_prop(seed, n):
+        _check_row_stochastic(seed, n)
