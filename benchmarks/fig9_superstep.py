@@ -44,28 +44,14 @@ class RingBatcher:
         return b
 
 
-def _mlp_params(key, d_in=192, num_classes=4, hidden=8):
-    import jax
-    import jax.numpy as jnp
-    k1, k2 = jax.random.split(key)
-    return {"w1": jax.random.normal(k1, (d_in, hidden)) / math.sqrt(d_in),
-            "b1": jnp.zeros((hidden,)),
-            "w2": jax.random.normal(k2, (hidden, num_classes))
-            / math.sqrt(hidden),
-            "b2": jnp.zeros((num_classes,))}
+def _mlp_params(*a, **kw):
+    from repro.models.tiny import mlp_params
+    return mlp_params(*a, **kw)
 
 
 def _mlp_loss(p, batch):
-    import jax
-    import jax.numpy as jnp
-    x = batch["images"].reshape(batch["images"].shape[0], -1)
-    h = jax.nn.relu(x @ p["w1"] + p["b1"])
-    logits = h @ p["w2"] + p["b2"]
-    labels = batch["labels"]
-    logp = jax.nn.log_softmax(logits)
-    loss = -jnp.take_along_axis(logp, labels[:, None], 1).mean()
-    acc = (logits.argmax(-1) == labels).mean()
-    return loss, {"accuracy": acc}
+    from repro.models.tiny import mlp_loss
+    return mlp_loss(p, batch)
 
 
 def _build(n: int, strategy, compiled: bool, rounds: int):

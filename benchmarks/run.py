@@ -33,7 +33,8 @@ def main(argv=None):
 
     from . import (fig2_connectivity, fig3_curves, fig4_connectivity_levels,
                    fig5_ablation, fig67_isolation, fig8_async,
-                   fig9_superstep, kernel_bench, roofline, table1_accuracy)
+                   fig9_superstep, fig10_sharded, kernel_bench, roofline,
+                   table1_accuracy)
 
     sections = [
         ("fig2", lambda: fig2_connectivity.main(
@@ -60,6 +61,9 @@ def main(argv=None):
             ["--rounds", "150" if args.full else "80"]
             + (["--nodes", "16", "50", "100"] if args.full
                else ["--nodes", "16", "50"]))),
+        ("fig10", lambda: fig10_sharded.main(
+            ["--rounds", "60" if args.full else "40",
+             "--chunk", "20", "--devices", "1", "8"])),
         ("kernels", lambda: kernel_bench.main([])),
         ("roofline", lambda: roofline.main(["--csv"])),
     ]

@@ -28,6 +28,24 @@ Each in-graph variant also implements the host ``round_edges`` API by
 driving the *same* jitted ``graph_round`` one round at a time, so the
 conformance tests can pit the per-round host loop against the fused scan
 on identical trajectories.
+
+**shard_map compatibility** (DESIGN.md §8).  The sharded superstep runs
+``graph_round`` *replicated* on every device of the mesh, so the
+contract additionally requires:
+
+* the graph state is a pure pytree of arrays sized by the **logical**
+  population n (never by device count) — no host state mutated inside
+  ``graph_round``, no python-side RNG;
+* ``graph_round`` is a deterministic function of ``(gstate, rnd, sim)``
+  — any randomness must come from PRNG keys inside ``gstate`` (Morph's
+  ``MorphGraphState.key``, Epidemic's folded key), which shard_map
+  replicates, keeping every device's negotiation bit-identical;
+* no collectives and no ``axis_index`` dependence inside
+  ``graph_round`` — the engine owns all cross-device communication
+  (parameter all_gather, mixing collective).
+
+All four ``InGraph*`` strategies satisfy this by construction; the
+sharded conformance tests (tests/test_superstep_sharded.py) pin it.
 """
 from __future__ import annotations
 
@@ -82,6 +100,10 @@ class InGraphMorphStrategy:
     # -- scan-capable surface ---------------------------------------------
 
     def init_graph_state(self):
+        """Device-resident :class:`MorphGraphState` pytree ([n, n] known/
+        sim/sim_valid/edges arrays + PRNG key) the scan carries.  Must be
+        a pure pytree of arrays — shard_map replicates it across devices
+        in the sharded engine (DESIGN.md §8)."""
         return self.state
 
     def set_graph_state(self, gstate, sim=None):
@@ -122,6 +144,10 @@ class InGraphMorphStrategy:
     # -- host strategy surface --------------------------------------------
 
     def round_edges(self, rnd: int, stacked_params=None):
+        """Host adapter: drive the same jitted ``graph_round`` one round
+        at a time.  ``stacked_params`` (node-stacked pytree, [n, ...])
+        refreshes the Eq.-3 cache when offered; returns ``(edges, W)``
+        numpy arrays ([n, n] bool / row-stochastic f64)."""
         import jax
         import jax.numpy as jnp
         if stacked_params is not None:
@@ -139,11 +165,21 @@ class InGraphMorphStrategy:
 
 
 class TopologyStrategy(Protocol):
+    """Duck-typed strategy surface every runtime drives: one call per
+    round producing that round's in-edge matrix and mixing matrix.
+
+    Optional attribute flags refine dispatch: ``needs_params`` (wants the
+    stacked models for similarity), ``uniform_mixing`` (W is the uniform
+    average, enabling the fused masked kernel), and the in-graph contract
+    (``in_graph``/``needs_sim``/``init_graph_state``/``graph_round``)
+    documented in the module docstring.
+    """
     name: str
 
     def round_edges(self, rnd: int, stacked_params=None
                     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Returns ``(edges, W)`` for this round (in-edge convention)."""
+        """Returns ``(edges, W)`` for this round: ``edges[i, j]`` = j
+        sends to i ([n, n] bool), ``W`` row-stochastic ([n, n] float)."""
         ...
 
 
@@ -163,11 +199,14 @@ class StaticStrategy:
         self._edges = self._adj.copy()   # symmetric: send both ways
 
     def round_edges(self, rnd: int, stacked_params=None):
+        """Same fixed graph and MH weights every round."""
         return self._edges, self._w
 
 
 @dataclass
 class FullyConnectedStrategy:
+    """All-to-all exchange with W = 1/n — the paper's optimistic upper
+    bound (n*(n-1) transfers per round)."""
     n: int
     name: str = "fully-connected"
     needs_params = False
@@ -177,6 +216,7 @@ class FullyConnectedStrategy:
         self._w = mixing.fully_connected_weights(self.n)
 
     def round_edges(self, rnd: int, stacked_params=None):
+        """Complete graph + uniform 1/n weights, every round."""
         return self._edges, self._w
 
 
@@ -199,6 +239,8 @@ class EpidemicStrategy:
             raise ValueError("EL-Local needs an initial partial view")
 
     def round_edges(self, rnd: int, stacked_params=None):
+        """Fresh random k-out in-edge matrix + uniform weights (host
+        numpy RNG; the in-graph variant uses a device PRNG instead)."""
         view = None if self.oracle else self.view
         edges = topology.random_out_regular(self.n, self.k, self._rng, view)
         return edges, mixing.uniform_weights(edges)
@@ -221,15 +263,20 @@ class InGraphStaticStrategy(StaticStrategy):
         self.name = "static-mh-ingraph"
 
     def init_graph_state(self):
+        """Stateless: the scan carries an empty pytree."""
         return ()
 
     def graph_round(self, gstate, rnd, sim):
+        """Emit the fixed ``(edges, W)`` as jit constants ([n, n] bool /
+        f32); ``rnd`` and ``sim`` are ignored."""
         import jax.numpy as jnp
         return gstate, jnp.asarray(self._edges), \
             jnp.asarray(self._w, jnp.float32)
 
 
 class InGraphFullyConnectedStrategy(FullyConnectedStrategy):
+    """Fully-connected baseline with the scan-capable surface (constant
+    complete graph, W = 1/n)."""
     in_graph = True
     needs_sim = False
     needs_params = False
@@ -239,9 +286,11 @@ class InGraphFullyConnectedStrategy(FullyConnectedStrategy):
         self.name = "fully-connected-ingraph"
 
     def init_graph_state(self):
+        """Stateless: the scan carries an empty pytree."""
         return ()
 
     def graph_round(self, gstate, rnd, sim):
+        """Emit the constant complete graph and 1/n weights."""
         import jax.numpy as jnp
         return gstate, jnp.asarray(self._edges), \
             jnp.asarray(self._w, jnp.float32)
@@ -266,9 +315,15 @@ class InGraphEpidemicStrategy:
         self._jit_round = jax.jit(self.graph_round)
 
     def init_graph_state(self):
+        """The carried state is just the base PRNG key (folded with the
+        round index each round, so the carry never actually changes)."""
         return self.key
 
     def graph_round(self, gstate, rnd, sim):
+        """One round inside jit: Gumbel-top-k draws k distinct receivers
+        per sender from ``fold_in(key, rnd)``; returns the [n, n] in-edge
+        matrix and uniform weights.  Pure function of (seed, rnd) — the
+        shard_map replication requirement comes for free."""
         import jax
         import jax.numpy as jnp
         from .selection import NEG_INF
@@ -285,6 +340,8 @@ class InGraphEpidemicStrategy:
         return gstate, edges, mixing.uniform_weights_jax(edges)
 
     def round_edges(self, rnd: int, stacked_params=None):
+        """Host adapter over the same jitted ``graph_round`` (identical
+        edge sequence to the fused scan for a given seed)."""
         import jax.numpy as jnp
         _, edges, w = self._jit_round(self.key, jnp.asarray(rnd), None)
         return np.asarray(edges), np.asarray(w)

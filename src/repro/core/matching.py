@@ -132,11 +132,17 @@ def match_jax(recv_scores: jax.Array,
     n = recv_scores.shape[0]
     if rounds is None:
         # the paper's ceil((n-1)/k) bound describes the *message* rounds;
-        # the dense parallel formulation can need up to n propose/keep
-        # sweeps to quiesce in the worst case (each sweep settles >= 1
-        # edge).  The while_loop below exits at the fixpoint — typically
-        # a handful of sweeps — with ``rounds`` as the safety bound.
-        rounds = n
+        # the dense parallel formulation needs more sweeps to quiesce.  In
+        # *tight markets* (total out-capacity == total demand, Morph's
+        # k_in == k_out case) eviction chains can run past n sweeps, and a
+        # bound of n demonstrably leaves receivers under k_in while
+        # willing senders still have capacity (see
+        # tests/test_matching.py::test_tight_market_*).  Each sweep
+        # settles at least one of the n*k_out sender slots permanently,
+        # so n * k_out is a true fixpoint bound.  The while_loop exits at
+        # the fixpoint — typically a handful of sweeps — so the larger
+        # safety bound costs nothing in the common case.
+        rounds = n * max(k_out, 1)
     eye = jnp.eye(n, dtype=bool)
     cand = candidate_mask & ~eye
 

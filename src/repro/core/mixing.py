@@ -60,6 +60,7 @@ def metropolis_hastings_weights(adj: np.ndarray) -> np.ndarray:
 
 
 def fully_connected_weights(n: int) -> np.ndarray:
+    """W = 1/n everywhere — the fully-connected upper bound's mixing."""
     return np.full((n, n), 1.0 / n)
 
 
@@ -112,8 +113,10 @@ def mix_numpy(w: np.ndarray, stacked: dict) -> dict:
 # ---------------------------------------------------------------------------
 
 def is_row_stochastic(w: np.ndarray, atol: float = 1e-9) -> bool:
+    """Nonnegative entries and unit row sums (every valid mixing W)."""
     return bool(np.all(w >= -atol) and
                 np.allclose(w.sum(axis=1), 1.0, atol=atol))
 
 def is_doubly_stochastic(w: np.ndarray, atol: float = 1e-9) -> bool:
+    """Row- and column-stochastic (MH weights, fully-connected W)."""
     return is_row_stochastic(w, atol) and is_row_stochastic(w.T, atol)

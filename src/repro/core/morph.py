@@ -50,6 +50,9 @@ class MorphGraphState(NamedTuple):
 
 
 def init_state(key: jax.Array, initial_adj: jax.Array) -> MorphGraphState:
+    """Bootstrap controller state from an [n, n] adjacency (the initial
+    overlay, self-loops stripped): known peers = current edges = the
+    bootstrap graph, similarity estimates empty."""
     n = initial_adj.shape[0]
     adj = initial_adj.astype(bool) & ~jnp.eye(n, dtype=bool)
     return MorphGraphState(

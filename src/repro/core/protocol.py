@@ -72,6 +72,8 @@ class ConnectRequest:
 
 @dataclass(frozen=True)
 class ConnectAccept:
+    """Sender agrees to serve ``receiver`` this negotiation round (it
+    will transfer its model every round until the next refresh)."""
     rnd: int
     sender: int
     receiver: int
@@ -79,6 +81,8 @@ class ConnectAccept:
 
 @dataclass(frozen=True)
 class ConnectReject:
+    """Sender declines (out-capacity full with more-dissimilar
+    requesters); the receiver falls back down its preference list."""
     rnd: int
     sender: int
     receiver: int
@@ -107,6 +111,7 @@ class NegotiationPlan:
 
 @dataclass
 class MorphConfig:
+    """Morph hyper-parameters (paper defaults in comments)."""
     n: int
     k: int                      # in-degree target == out-degree cap
     view_size: Optional[int] = None   # s; defaults to k + 2 random edges
@@ -188,10 +193,12 @@ class MorphProtocol:
     # -- negotiation (Alg. 3 + college admission), message-phased ----------
 
     def negotiation_due(self, rnd: int) -> bool:
+        """True on the Δ_r refresh cadence (and before the first one)."""
         return self._edges is None or rnd % self.cfg.delta_r == 0
 
     @property
     def current_edges(self) -> Optional[np.ndarray]:
+        """The held [n, n] in-edge matrix (None before round 0)."""
         return self._edges
 
     def begin_negotiation(self, rnd: int,
@@ -345,4 +352,5 @@ class MorphProtocol:
     # -- introspection ------------------------------------------------------
 
     def view_sizes(self) -> np.ndarray:
+        """Per-node partial-view size |P_i| (gossip discovery growth)."""
         return np.array([len(st.known_peers) for st in self.nodes])

@@ -121,9 +121,12 @@ class SimilarityHistory:
             lambda: collections.deque(maxlen=HISTORY_DEPTH)))
 
     def observe_direct(self, peer: int, sim: float) -> None:
+        """Record a first-hand Eq.-3 measurement against ``peer``."""
         self.direct[peer] = float(sim)
 
     def observe_report(self, report: SimilarityReport) -> None:
+        """Append a gossiped third-party report to H_z (bounded deque,
+        newest-``depth`` kept)."""
         dq = self.reports[report.target]
         if dq.maxlen != self.depth:  # honour a non-default depth
             dq = collections.deque(dq, maxlen=self.depth)
@@ -148,6 +151,7 @@ class SimilarityHistory:
         return float(np.mean(vals))
 
     def known_peers(self) -> List[int]:
+        """Every peer with a direct measurement or at least one report."""
         out = set(self.direct)
         out.update(self.reports)
         return sorted(out)

@@ -73,6 +73,7 @@ def random_out_regular(n: int, k: int, rng: np.random.Generator,
 
 
 def fully_connected(n: int) -> np.ndarray:
+    """Complete in-edge matrix (everyone sends to everyone else)."""
     return ~np.eye(n, dtype=bool)
 
 
@@ -103,10 +104,12 @@ def isolated_nodes(edges: np.ndarray) -> np.ndarray:
 
 
 def in_degrees(edges: np.ndarray) -> np.ndarray:
+    """Per-node count of models received this round (row sums)."""
     return edges.sum(axis=1)
 
 
 def out_degrees(edges: np.ndarray) -> np.ndarray:
+    """Per-node count of models sent this round (column sums)."""
     return edges.sum(axis=0)
 
 
@@ -161,9 +164,12 @@ class TopologyState:
 
     @classmethod
     def empty(cls, n: int) -> "TopologyState":
+        """Round-zero state: no edges yet."""
         return cls(n=n, edges=np.zeros((n, n), bool))
 
     def advance(self, edges: np.ndarray) -> None:
+        """Record one round: adopt ``edges``, bump counters, append the
+        isolation count."""
         self.edges = edges
         self.round += 1
         self.total_transfers += int(edges.sum())

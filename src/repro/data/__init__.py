@@ -2,11 +2,13 @@
 per-node batch pipelines."""
 from .partition import (by_writer_partition, dirichlet_partition,
                         heterogeneity, label_distributions)
-from .pipeline import NodeBatcher, StackedBatcher, TokenBatcher
+from .pipeline import (DeviceDataStream, NodeBatcher, StackedBatcher,
+                       TokenBatcher)
 from .synthetic import (ImageDataset, make_image_classification,
                         make_token_stream, train_test_split)
 
 __all__ = ["by_writer_partition", "dirichlet_partition", "heterogeneity",
-           "label_distributions", "NodeBatcher", "StackedBatcher",
+           "label_distributions", "DeviceDataStream", "NodeBatcher",
+           "StackedBatcher",
            "TokenBatcher", "ImageDataset", "make_image_classification",
            "make_token_stream", "train_test_split"]

@@ -57,6 +57,57 @@ class StackedBatcher:
                 for k in batches[0]}
 
 
+class DeviceDataStream:
+    """Device-resident dataset for the compiled superstep (DESIGN.md §8).
+
+    Instead of the host drawing + staging ``[K, n, b, ...]`` batch stacks
+    per chunk (:class:`StackedBatcher`), the *entire* per-node shards live
+    on device as ``[n, S, ...]`` arrays (``S`` = the largest shard size;
+    shorter shards wrap) and each round's batch is drawn **inside the scan
+    body** with ``jax.random`` — zero host transfer per round, which is
+    what unlocks the paper-scale n=100, 10^4-round sweeps.
+
+    Batch identity contract: node ``i``'s round-``r`` batch is a pure
+    function of ``(seed, r, i)`` (``fold_in(fold_in(key, r), i)``), so the
+    drawn sequence is identical no matter how the node axis is sharded —
+    the sharded-vs-single-device conformance tests rely on this.  It is
+    *not* the :class:`StackedBatcher` sequence (that one shuffles without
+    replacement on the host); conformance against the host loop uses the
+    prefetched host-batch path instead.
+    """
+
+    def __init__(self, ds: ImageDataset, parts: Sequence[np.ndarray],
+                 batch_size: int, seed: int = 0):
+        sizes = [len(p) for p in parts]
+        if min(sizes) == 0:
+            raise ValueError("empty shard")
+        S = max(sizes)
+        idx = np.stack([np.pad(np.asarray(p), (0, S - len(p)), mode="wrap")
+                        for p in parts])                       # [n, S]
+        self.data = {"images": ds.images[idx], "labels": ds.labels[idx]}
+        self.sizes = np.asarray(sizes, np.int32)               # [n]
+        self.batch = batch_size
+        self.seed = seed
+        self.n = len(parts)
+
+    def draw(self, data, sizes, node_ids, rnd):
+        """One stacked batch *inside jit*: ``data`` is (a shard of) the
+        ``[n, S, ...]`` arrays, ``sizes``/``node_ids`` the matching
+        ``[n]`` slices, ``rnd`` the traced round index.  Returns a
+        ``[n, b, ...]`` batch pytree.  Sampling is with replacement,
+        uniform over each node's true shard (the wrap-padding tail is
+        never indexed)."""
+        import jax
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), rnd)
+
+        def one(d, size, nid):
+            k = jax.random.fold_in(key, nid)
+            take = jax.random.randint(k, (self.batch,), 0, size)
+            return jax.tree_util.tree_map(lambda x: x[take], d)
+
+        return jax.vmap(one)(data, sizes, node_ids)
+
+
 class TokenBatcher:
     """Next-token LM batches from a per-node token stream."""
 

@@ -4,7 +4,7 @@ from .distributed import (MorphHParams, TrainState, abstract_train_state,
                           batch_sharding, cache_sharding, init_train_state,
                           leaf_spec, make_serve_step, make_train_step,
                           node_axes, params_sharding, replicated,
-                          train_state_sharding)
+                          superstep_node_sharding, train_state_sharding)
 from .metrics import (MetricsLog, NetMetricsLog, NetRecord, RoundRecord,
                       internode_variance)
 from .runtime import DecentralizedRunner, RunnerConfig
@@ -13,6 +13,7 @@ __all__ = ["CompiledSuperstep", "eval_boundaries",
            "MorphHParams", "TrainState", "abstract_train_state",
            "batch_sharding", "cache_sharding", "init_train_state",
            "leaf_spec", "make_serve_step", "make_train_step", "node_axes",
-           "params_sharding", "replicated", "train_state_sharding",
+           "params_sharding", "replicated", "superstep_node_sharding",
+           "train_state_sharding",
            "MetricsLog", "NetMetricsLog", "NetRecord", "RoundRecord",
            "internode_variance", "DecentralizedRunner", "RunnerConfig"]

@@ -24,22 +24,58 @@ form the chunk boundaries, so the engine evaluates exactly where the host
 runner does and the two paths emit identical logs.  See DESIGN.md §7 for
 the layout and for when the host path is still required (protocol-level
 message-faithful runs, netsim).
+
+**Sharded mode** (DESIGN.md §8).  Pass ``mesh`` (see
+:func:`repro.launch.mesh.make_superstep_mesh`) and the whole superstep
+runs under ``shard_map`` with the **node axis as a mesh axis**: each
+device owns ``n_pad / num_devices`` nodes' parameters, optimizer state
+and batches, the vmapped local step runs data-parallel, and the
+cross-node operations lower to real collectives —
+
+* similarity needs every pair, so the post-step parameters are
+  ``all_gather``-ed along the node axis before the Eq.-3 kernel;
+* ``graph_mix`` becomes either each device's **row block** of ``W``
+  applied to the gathered population (``collective="gather"``, bitwise
+  identical to the single-device contraction) or a partial-products
+  ``psum`` along the node axis (``collective="psum"``, reduce-scatter
+  schedule, f32-rounding-close);
+* the strategy's graph state, the ``[n, n]`` similarity cache and
+  ``graph_round`` itself stay **replicated** — every device runs the
+  identical (deterministic) negotiation, which is what lets the edge
+  stack come back from the scan as a replicated output.
+
+The node axis is zero-padded up to a multiple of the shard count
+(``n_pad``); padded rows carry edge-replicated parameters, never gain
+in-edges (``W`` is embedded with an identity tail), and are sliced away
+from every externally visible array — ``params`` / ``opt_state`` are
+properties returning the logical ``[n, ...]`` view.
+
+**Batch streaming.**  By default each chunk prefetches its ``[K, n, b,
+...]`` batch stack from the host batcher.  Pass ``data_stream``
+(:class:`repro.data.DeviceDataStream`) instead to keep the *entire*
+per-node shards device-resident and draw every round's batch inside the
+scan body with ``jax.random`` — no host transfer per round at all.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import apply_mixing
-from ..data.pipeline import StackedBatcher
+from ..data.pipeline import DeviceDataStream, StackedBatcher
 from ..kernels import ops
 from ..optim import Optimizer
 from .metrics import MetricsLog, RoundRecord
 from .runtime import (RunnerConfig, make_evaluator, make_local_step,
                       make_round_record, stacked_model_bytes)
+
+COLLECTIVES = ("gather", "psum")
 
 
 def eval_boundaries(rounds: int, eval_every: int) -> List[Tuple[int, int]]:
@@ -54,48 +90,116 @@ def eval_boundaries(rounds: int, eval_every: int) -> List[Tuple[int, int]]:
     return chunks
 
 
+def _pad_nodes(tree, n_pad: int):
+    """Edge-replicate the leading node axis of every leaf up to ``n_pad``
+    (repeating the last real node keeps padded rows numerically
+    well-behaved for arbitrary loss functions, unlike zeros)."""
+    def one(x):
+        if getattr(x, "ndim", 0) == 0:
+            return jnp.asarray(x)        # shared scalar (opt counter etc.)
+        pad = n_pad - x.shape[0]
+        if pad <= 0:
+            return jnp.asarray(x)
+        width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(jnp.asarray(x), width, mode="edge")
+    return jax.tree_util.tree_map(one, tree)
+
+
 class CompiledSuperstep:
     """Runs an in-graph-capable :class:`TopologyStrategy` (one exposing
-    ``init_graph_state`` / ``graph_round``) in fused K-round supersteps.
+    ``init_graph_state`` / ``graph_round`` — the contract in
+    ``core.baselines``) in fused K-round supersteps.
 
-    ``use_pallas`` routes similarity through the blocked Gram kernel and
-    uniform mixing through the fused masked-mix kernel (``interpret=True``
-    to execute their bodies on CPU); the default pure-jnp path is what the
-    conformance tests pit against the host loop bit-for-bit.
+    Construction arguments (shapes: ``n`` = ``cfg.n_nodes`` logical
+    nodes, node-stacked pytrees carry a leading ``[n, ...]`` axis):
+
+    * ``loss_fn(params, batch) -> (loss, aux)`` / ``eval_fn`` — per-node
+      functions, vmapped by the engine;
+    * ``batcher`` — host batcher yielding ``[n, b, ...]`` stacks
+      (prefetched per chunk), or ``None`` with ``data_stream`` set;
+    * ``data_stream`` — :class:`repro.data.DeviceDataStream` for
+      device-resident in-scan batch drawing (mutually exclusive with
+      ``batcher``);
+    * ``mesh`` — optional 1-D ``("data",)`` JAX mesh
+      (:func:`repro.launch.mesh.make_superstep_mesh`); shards the node
+      axis via ``shard_map``;
+    * ``collective`` — sharded mixing schedule, ``"gather"`` (row-block,
+      bitwise-matches single-device) or ``"psum"`` (partial-products
+      reduce);
+    * ``use_pallas`` routes similarity through the blocked Gram kernel
+      and mixing through the fused kernels (``interpret=True`` to
+      execute their bodies on CPU); the default pure-jnp path is what
+      the conformance tests pit against the host loop bit-for-bit.
+
+    Invariants: ``params`` / ``opt_state`` expose the logical ``[n,
+    ...]`` view even in sharded mode (padding is internal); the decoded
+    ``MetricsLog`` / ``edge_history`` / comm-byte accounting are
+    identical to the host runner's for the same trajectory.
     """
 
     def __init__(self, *, init_fn: Callable, loss_fn: Callable,
                  eval_fn: Callable, optimizer: Optimizer,
-                 batcher: StackedBatcher, test_batch: Dict[str, np.ndarray],
+                 batcher: Optional[StackedBatcher],
+                 test_batch: Dict[str, np.ndarray],
                  strategy, cfg: RunnerConfig,
                  use_pallas: bool = False, interpret: bool = False,
                  block_d: Optional[int] = None,
-                 params=None, opt_state=None):
+                 params=None, opt_state=None,
+                 mesh=None, collective: str = "gather",
+                 data_stream: Optional[DeviceDataStream] = None):
         if not getattr(strategy, "in_graph", False):
             raise TypeError(
                 f"strategy {getattr(strategy, 'name', strategy)!r} has no "
                 "in-graph surface (init_graph_state/graph_round); use the "
                 "host DecentralizedRunner for protocol-level strategies")
+        if collective not in COLLECTIVES:
+            raise ValueError(f"collective={collective!r} not in "
+                             f"{COLLECTIVES}")
+        if data_stream is None and batcher is None:
+            raise ValueError("need a host batcher or a data_stream")
+        if data_stream is not None and data_stream.n != cfg.n_nodes:
+            raise ValueError(f"data_stream covers {data_stream.n} nodes, "
+                             f"config says {cfg.n_nodes}")
         self.cfg = cfg
         self.strategy = strategy
         self.batcher = batcher
+        self.stream = data_stream
         self.test_batch = {k: jnp.asarray(v) for k, v in test_batch.items()}
         if params is None:
             keys = jax.random.split(jax.random.PRNGKey(cfg.seed),
                                     cfg.n_nodes)
             params = jax.vmap(init_fn)(keys)
             opt_state = jax.vmap(optimizer.init)(params)
-        self.params = params
-        self.opt_state = opt_state
         self.opt = optimizer
         self.log = MetricsLog()
         self.edge_history: list = []
         self._comm_bytes = 0
         self._model_bytes = cfg.model_bytes \
-            or stacked_model_bytes(self.params, cfg.n_nodes)
+            or stacked_model_bytes(params, cfg.n_nodes)
+
+        # --- node-axis sharding layout -------------------------------------
+        n = cfg.n_nodes
+        self.mesh = mesh
+        self.collective = collective
+        if mesh is not None:
+            from .distributed import superstep_node_sharding
+            self._axes, self._shard, self._nspec = \
+                superstep_node_sharding(mesh)
+        else:
+            self._axes, self._shard, self._nspec = (), 1, None
+        self.n_pad = math.ceil(n / self._shard) * self._shard
+        self._n_local = self.n_pad // self._shard
+
+        self._params = _pad_nodes(params, self.n_pad)
+        self._opt_state = _pad_nodes(opt_state, self.n_pad)
+        if mesh is not None:
+            put = lambda t: jax.tree_util.tree_map(
+                lambda x: jax.device_put(
+                    x, NamedSharding(mesh, self._leaf_pspec(x))), t)
+            self._params = put(self._params)
+            self._opt_state = put(self._opt_state)
 
         self.gstate = strategy.init_graph_state()
-        n = cfg.n_nodes
         self.sim = jnp.zeros((n, n), jnp.float32)
         needs_sim = bool(getattr(strategy, "needs_sim", False))
         uniform = bool(getattr(strategy, "uniform_mixing", False))
@@ -108,16 +212,78 @@ class CompiledSuperstep:
             sim_fn = strategy.compute_sim
 
         local_step = make_local_step(loss_fn, optimizer)
+        n_pad, n_local, axes = self.n_pad, self._n_local, self._axes
+        sharded = mesh is not None
+        stream = data_stream
+
+        def embed_w(w):
+            # [n, n] -> [n_pad, n_pad]: identity tail, so padded rows keep
+            # their own (dummy) model and never leak into real rows.
+            if n_pad == n:
+                return w
+            wp = jnp.zeros((n_pad, n_pad), w.dtype).at[:n, :n].set(w)
+            tail = jnp.arange(n, n_pad)
+            return wp.at[tail, tail].set(1)
+
+        def shard_index():
+            idx = jnp.int32(0)
+            for a in axes:
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            return idx
+
+        def gather_full(tree):
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.all_gather(x, axes, axis=0, tiled=True),
+                tree)
+
+        def mix_rows(w_rows, full):
+            # row block of W @ X — same per-element dot products as
+            # apply_mixing, so bitwise-identical to the unsharded engine.
+            if use_pallas:
+                return ops.mix_pytree(w_rows.astype(jnp.float32), full,
+                                      block_d=block_d, interpret=interpret)
+            def one(leaf):
+                mixed = jnp.tensordot(w_rows.astype(jnp.float32),
+                                      leaf.astype(jnp.float32),
+                                      axes=((1,), (0,)),
+                                      precision=jax.lax.Precision.HIGHEST)
+                return mixed.astype(leaf.dtype)
+            return jax.tree_util.tree_map(one, full)
+
+        def mix_psum(w_cols, local):
+            # each device contributes W[:, its cols] @ X[its rows]; the
+            # psum is the node-axis reduction (reduce-scatter schedule).
+            def one(leaf):
+                if use_pallas:
+                    flat = leaf.reshape(n_local, -1).astype(jnp.float32)
+                    part = ops.mix(w_cols.astype(jnp.float32), flat,
+                                   block_d=block_d, interpret=interpret)
+                    part = part.reshape((n_pad,) + leaf.shape[1:])
+                else:
+                    part = jnp.tensordot(
+                        w_cols.astype(jnp.float32),
+                        leaf.astype(jnp.float32), axes=((1,), (0,)),
+                        precision=jax.lax.Precision.HIGHEST)
+                summed = jax.lax.psum(part, axes)
+                own = jax.lax.dynamic_slice_in_dim(
+                    summed, shard_index() * n_local, n_local, 0)
+                return own.astype(leaf.dtype)
+            return jax.tree_util.tree_map(one, local)
+
+        def refresh_sim(rnd, params_logical, sim):
+            return jax.lax.cond(
+                rnd % cfg.sim_every == 0,
+                lambda p, s: sim_fn(p).astype(jnp.float32),
+                lambda p, s: s,
+                params_logical, sim)
 
         def round_body(carry, xs):
+            # Single-device body: identical to the pre-sharding engine.
             params, opt_state, gstate, sim = carry
             rnd, batch = xs
             params, opt_state = local_step(params, opt_state, batch)
             if sim_fn is not None:
-                sim = jax.lax.cond(rnd % cfg.sim_every == 0,
-                                   lambda p, s: sim_fn(p).astype(jnp.float32),
-                                   lambda p, s: s,
-                                   params, sim)
+                sim = refresh_sim(rnd, params, sim)
             gstate, edges, w = strategy.graph_round(gstate, rnd, sim)
             if use_pallas and uniform:
                 params = ops.mix_masked_pytree(edges, params,
@@ -130,26 +296,159 @@ class CompiledSuperstep:
                 params = apply_mixing(w.astype(jnp.float32), params)
             return (params, opt_state, gstate, sim), edges
 
-        @jax.jit
-        def superstep(carry, rnds, batches):
-            return jax.lax.scan(round_body, carry, (rnds, batches))
+        def round_body_sharded(carry, xs):
+            # Per-device body under shard_map: params/opt_state/batch are
+            # the device's [n_local, ...] shard; gstate/sim/edges stay
+            # replicated at logical n.
+            params, opt_state, gstate, sim = carry
+            rnd, batch = xs
+            params, opt_state = local_step(params, opt_state, batch)
+            full = gather_full(params) if collective == "gather" else None
+            if sim_fn is not None and full is not None:
+                logical = jax.tree_util.tree_map(lambda x: x[:n], full)
+                sim = refresh_sim(rnd, logical, sim)
+            elif sim_fn is not None:
+                # psum mode has no standing gather; pull the population in
+                # only on refresh rounds (the cond predicate is replicated,
+                # so every device takes the same branch and the collective
+                # stays well-formed).
+                def psum_mode_refresh(p, s):
+                    logical = jax.tree_util.tree_map(
+                        lambda x: jax.lax.all_gather(
+                            x, axes, axis=0, tiled=True)[:n], p)
+                    return sim_fn(logical).astype(jnp.float32)
+                sim = jax.lax.cond(rnd % cfg.sim_every == 0,
+                                   psum_mode_refresh,
+                                   lambda p, s: s, params, sim)
+            gstate, edges, w = strategy.graph_round(gstate, rnd, sim)
+            w_pad = embed_w(w.astype(jnp.float32))
+            if collective == "gather":
+                w_rows = jax.lax.dynamic_slice_in_dim(
+                    w_pad, shard_index() * n_local, n_local, 0)
+                params = mix_rows(w_rows, full)
+            else:
+                w_cols = jax.lax.dynamic_slice_in_dim(
+                    w_pad, shard_index() * n_local, n_local, 1)
+                params = mix_psum(w_cols, params)
+            return (params, opt_state, gstate, sim), edges
 
-        self._superstep = superstep
+        body = round_body_sharded if sharded else round_body
+
+        if stream is None:
+            def superstep(carry, rnds, batches):
+                return jax.lax.scan(body, carry, (rnds, batches))
+        else:
+            def superstep(carry, rnds, data, sizes, ids):
+                def step(c, rnd):
+                    batch = stream.draw(data, sizes, ids, rnd)
+                    return body(c, (rnd, batch))
+                return jax.lax.scan(step, carry, rnds)
+
+        if sharded:
+            carry_specs = (
+                jax.tree_util.tree_map(self._leaf_pspec, self._params),
+                jax.tree_util.tree_map(self._leaf_pspec, self._opt_state),
+                jax.tree_util.tree_map(lambda _: P(), self.gstate),
+                P())
+            if stream is None:
+                # batch stacks are [K, n_pad, b, ...]: node axis = dim 1.
+                self._batch_spec = P(None, self._nspec)
+                xs_specs = (P(), None)        # batch tree filled per chunk
+            else:
+                xs_specs = (P(), P(self._nspec), P(self._nspec),
+                            P(self._nspec))
+            self._carry_specs = carry_specs
+            self._xs_specs = xs_specs
+            self._superstep_fn = superstep
+            self._superstep = None            # built lazily (needs the
+                                              # batch pytree for in_specs)
+        else:
+            self._superstep = jax.jit(superstep)
+
+        if stream is not None:
+            spec = (P(self._nspec) if sharded else None)
+            put = (lambda x: jax.device_put(
+                jnp.asarray(x), NamedSharding(mesh, spec))) if sharded \
+                else jnp.asarray
+            self._stream_args = (
+                jax.tree_util.tree_map(
+                    put, _pad_nodes(stream.data, self.n_pad)),
+                put(_pad_nodes(stream.sizes, self.n_pad)),
+                put(jnp.arange(self.n_pad, dtype=jnp.int32)))
+
         self._evaluate = jax.jit(make_evaluator(eval_fn))
 
     # ------------------------------------------------------------------
 
+    def _leaf_pspec(self, leaf) -> P:
+        """PartitionSpec for one state leaf: node-sharded on dim 0 when it
+        carries the padded node axis, replicated otherwise (scalar
+        optimizer counters and the like)."""
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == self.n_pad:
+            return P(self._nspec)
+        return P()
+
+    @property
+    def params(self):
+        """Node-stacked parameters, logical ``[n, ...]`` view (padded
+        rows are internal to sharded mode)."""
+        if self.n_pad == self.cfg.n_nodes:
+            return self._params
+        return jax.tree_util.tree_map(
+            lambda x: x[:self.cfg.n_nodes], self._params)
+
+    @property
+    def opt_state(self):
+        """Optimizer state, logical ``[n, ...]`` view."""
+        if self.n_pad == self.cfg.n_nodes:
+            return self._opt_state
+        return jax.tree_util.tree_map(
+            lambda x: x[:self.cfg.n_nodes] if getattr(x, "ndim", 0) >= 1
+            and x.shape[0] == self.n_pad else x, self._opt_state)
+
+    def _get_superstep(self, batches) -> Callable:
+        """The jitted superstep; in sharded mode, wrap in shard_map on
+        first use (prefetch mode needs the batch pytree structure for its
+        in_specs)."""
+        if self._superstep is not None:
+            return self._superstep
+        if self.stream is None:
+            batch_specs = jax.tree_util.tree_map(
+                lambda _: self._batch_spec, batches)
+            in_specs = (self._carry_specs, P(), batch_specs)
+        else:
+            data_specs = jax.tree_util.tree_map(
+                lambda _: self._xs_specs[1], self._stream_args[0])
+            in_specs = (self._carry_specs, self._xs_specs[0], data_specs,
+                        self._xs_specs[2], self._xs_specs[3])
+        self._superstep = jax.jit(shard_map(
+            self._superstep_fn, mesh=self.mesh, in_specs=in_specs,
+            out_specs=(self._carry_specs, P()), check_rep=False))
+        return self._superstep
+
     def _run_chunk(self, start: int, end: int) -> np.ndarray:
         """Execute rounds ``[start, end]`` as one on-device superstep and
-        decode the stacked per-round edge matrices."""
+        decode the stacked per-round edge matrices (``[K, n, n]`` bool,
+        logical n)."""
         k = end - start + 1
-        host_batches = [self.batcher.next() for _ in range(k)]
-        batches = {key: jnp.asarray(np.stack([b[key] for b in host_batches]))
-                   for key in host_batches[0]}
         rnds = jnp.arange(start, end + 1)
-        carry = (self.params, self.opt_state, self.gstate, self.sim)
-        carry, edges_stack = self._superstep(carry, rnds, batches)
-        self.params, self.opt_state, self.gstate, self.sim = carry
+        carry = (self._params, self._opt_state, self.gstate, self.sim)
+        if self.stream is None:
+            host_batches = [self.batcher.next() for _ in range(k)]
+            batches = {key: jnp.asarray(
+                np.stack([b[key] for b in host_batches]))
+                for key in host_batches[0]}
+            if self.n_pad != self.cfg.n_nodes:
+                batches = {key: jnp.pad(
+                    v, [(0, 0), (0, self.n_pad - self.cfg.n_nodes)]
+                    + [(0, 0)] * (v.ndim - 2), mode="edge")
+                    for key, v in batches.items()}
+            fn = self._get_superstep(batches)
+            carry, edges_stack = fn(carry, rnds, batches)
+        else:
+            fn = self._get_superstep(None)
+            carry, edges_stack = fn(carry, rnds, *self._stream_args)
+        self._params, self._opt_state, self.gstate, self.sim = carry
         if hasattr(self.strategy, "set_graph_state"):
             self.strategy.set_graph_state(self.gstate, self.sim)
         edges_np = np.asarray(edges_stack, bool)
@@ -158,6 +457,9 @@ class CompiledSuperstep:
         return edges_np
 
     def evaluate(self, rnd: int, edges: np.ndarray) -> RoundRecord:
+        """Evaluate every node on the shared test set after round ``rnd``
+        and append the §IV-A4 :class:`RoundRecord` (mean accuracy/loss,
+        inter-node variance, cumulative comm bytes, isolation count)."""
         losses, metrics = self._evaluate(self.params, self.test_batch)
         rec = make_round_record(rnd, losses, metrics, self._comm_bytes,
                                 edges)
@@ -166,6 +468,9 @@ class CompiledSuperstep:
 
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
             ) -> MetricsLog:
+        """Run all ``cfg.rounds`` rounds in eval-boundary-aligned
+        supersteps; returns the same :class:`MetricsLog` the host runner
+        would produce for this trajectory."""
         for start, end in eval_boundaries(self.cfg.rounds,
                                           self.cfg.eval_every):
             edges_np = self._run_chunk(start, end)
@@ -176,7 +481,7 @@ class CompiledSuperstep:
 
     def run_steps(self, rounds: int, chunk: int) -> None:
         """Throughput mode: run ``rounds`` rounds in fixed-size supersteps
-        with no evaluation — the fig9 benchmark loop."""
+        with no evaluation — the fig9/fig10 benchmark loop."""
         start = 0
         while start < rounds:
             end = min(start + chunk, rounds) - 1

@@ -47,6 +47,8 @@ def _axis_size(mesh: Mesh, name: str) -> int:
 
 
 def node_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes the DL node axis maps onto under ``node_dp`` (and in the
+    sharded superstep): ``('pod', 'data')`` multi-pod, else ``('data',)``."""
     return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
 
 
@@ -178,6 +180,8 @@ def cache_spec(path, shape, *, policy: str, mesh: Mesh,
 
 
 def cache_sharding(mesh: Mesh, cfg, cache_shape) -> Any:
+    """Tree of NamedShardings for node-stacked decode caches (see
+    :func:`cache_spec` for the per-leaf policy)."""
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(
             mesh, cache_spec(path, leaf.shape, policy=cfg.sharding_policy,
@@ -186,7 +190,34 @@ def cache_sharding(mesh: Mesh, cfg, cache_shape) -> Any:
 
 
 def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully replicated NamedSharding (empty PartitionSpec) on ``mesh``."""
     return NamedSharding(mesh, P())
+
+
+def superstep_node_sharding(mesh: Mesh) -> Tuple[Tuple[str, ...], int, P]:
+    """Node-axis sharding for the sharded compiled superstep (DESIGN.md §8).
+
+    Returns ``(axis_names, shard, spec)``:
+
+    * ``axis_names`` — the mesh axes the DL node axis maps onto, the same
+      axes the ``node_dp`` policy uses (``('pod', 'data')`` on a multi-pod
+      mesh, ``('data',)`` otherwise);
+    * ``shard`` — their total size (number of node-axis shards); the
+      engine pads the node axis up to a multiple of this;
+    * ``spec`` — the one-dim :class:`PartitionSpec` entry for the leading
+      axis of node-stacked leaves (``P(spec, ...)`` inside shard_map
+      in/out specs).
+
+    Size-1 axes are kept: collectives over them are no-ops, so a 1-device
+    mesh runs the identical sharded program (what the conformance tests
+    exploit).
+    """
+    names = node_axes(mesh)
+    shard = 1
+    for a in names:
+        shard *= _axis_size(mesh, a)
+    spec = names[0] if len(names) == 1 else names
+    return names, shard, spec
 
 
 def serve_kv_spec(mesh: Mesh, cfg, per_node_batch: int) -> P:
@@ -209,6 +240,8 @@ def serve_kv_spec(mesh: Mesh, cfg, per_node_batch: int) -> P:
 # ---------------------------------------------------------------------------
 
 class MorphHParams(NamedTuple):
+    """Morph knobs threaded into the sharded train step (paper defaults
+    in comments)."""
     k: int = 3                  # in-degree / out-degree cap
     view_size: int = 5          # k + |R| (Fig. 2: two random edges)
     beta: float = 500.0         # paper default softmax sharpness
@@ -216,6 +249,8 @@ class MorphHParams(NamedTuple):
 
 
 class TrainState(NamedTuple):
+    """Sharded-path training state: node-stacked params/optimizer state
+    plus the (replicated) Morph controller state."""
     params: Any
     opt_state: Any
     morph: MorphGraphState
@@ -223,6 +258,8 @@ class TrainState(NamedTuple):
 
 def init_train_state(key, cfg, optimizer: Optimizer, n_nodes: int
                      ) -> TrainState:
+    """Fresh state: per-node init keys, vmapped model/optimizer init,
+    Morph bootstrapped on a bidirectional ring."""
     kp, km = jax.random.split(key)
     node_keys = jax.random.split(kp, n_nodes)
     params = jax.vmap(lambda k: model.init_params(k, cfg))(node_keys)
@@ -323,6 +360,8 @@ def make_serve_step(cfg, *, window="cfg", kv_spec=None):
 # ---------------------------------------------------------------------------
 
 def abstract_train_state(cfg, optimizer: Optimizer, n_nodes: int):
+    """ShapeDtypeStruct tree of :func:`init_train_state` (no allocation;
+    feeds the dry-run lowering and sharding assignment)."""
     return jax.eval_shape(
         lambda k: init_train_state(k, cfg, optimizer, n_nodes),
         jax.random.PRNGKey(0))
@@ -346,6 +385,9 @@ def abstract_cache(cfg, n_nodes: int, per_node_batch: int, max_len: int):
 
 
 def train_state_sharding(mesh: Mesh, cfg, state_shape) -> TrainState:
+    """NamedSharding tree for a whole TrainState: params via the path
+    heuristic, optimizer state mirroring params (scalar counters
+    replicated), Morph controller state fully replicated."""
     params_sh = params_sharding(mesh, cfg, state_shape.params)
     # optimizer state mirrors params (count scalars replicated)
     def opt_leaf(path, leaf):

@@ -21,6 +21,10 @@ import numpy as np
 
 @dataclass
 class RoundRecord:
+    """One evaluation point in the round domain (§IV-A4): mean test
+    accuracy/loss over nodes, inter-node accuracy variance (percentage
+    points squared), cumulative comm bytes, isolated-node count, and
+    optionally the raw per-node accuracy vector [n]."""
     rnd: int
     mean_accuracy: float
     mean_loss: float
@@ -32,15 +36,22 @@ class RoundRecord:
 
 @dataclass
 class MetricsLog:
+    """Append-only round-domain evaluation log; the same container is
+    produced by the host loop, the compiled superstep and (as the round
+    half of its output) the async runner — conformance tests compare
+    these record-for-record."""
     records: List[RoundRecord] = field(default_factory=list)
 
     def add(self, rec: RoundRecord) -> None:
+        """Append one evaluation point."""
         self.records.append(rec)
 
     def last(self) -> RoundRecord:
+        """Most recent record (raises on an empty log)."""
         return self.records[-1]
 
     def best_accuracy(self) -> float:
+        """Best mean accuracy over all evaluation points."""
         return max(r.mean_accuracy for r in self.records)
 
     def rounds_to_accuracy(self, target: float) -> Optional[int]:
@@ -52,12 +63,15 @@ class MetricsLog:
         return None
 
     def comm_to_accuracy(self, target: float) -> Optional[int]:
+        """Cumulative bytes moved when ``target`` mean accuracy is first
+        reached (the paper's communication-efficiency axis) or None."""
         for r in self.records:
             if r.mean_accuracy >= target:
                 return r.comm_bytes
         return None
 
     def as_arrays(self) -> Dict[str, np.ndarray]:
+        """Column-wise view for plotting/CSV (one entry per record)."""
         return {
             "round": np.array([r.rnd for r in self.records]),
             "accuracy": np.array([r.mean_accuracy for r in self.records]),
@@ -94,10 +108,14 @@ class NetRecord:
 
 @dataclass
 class NetMetricsLog:
+    """Wall-clock-domain log of the event-driven runtime: evaluation
+    records indexed by virtual seconds plus the global staleness
+    histogram (model age in rounds -> count)."""
     records: List[NetRecord] = field(default_factory=list)
     staleness_hist: Dict[int, int] = field(default_factory=dict)
 
     def add(self, rec: NetRecord) -> None:
+        """Append one evaluation point."""
         self.records.append(rec)
 
     def observe_staleness(self, rounds_old: int) -> None:
@@ -109,9 +127,11 @@ class NetMetricsLog:
         self.staleness_hist[key] = self.staleness_hist.get(key, 0) + 1
 
     def last(self) -> NetRecord:
+        """Most recent record (raises on an empty log)."""
         return self.records[-1]
 
     def best_accuracy(self) -> float:
+        """Best mean accuracy over all evaluation points."""
         return max(r.mean_accuracy for r in self.records)
 
     def time_to_accuracy(self, target: float) -> Optional[float]:
@@ -123,12 +143,15 @@ class NetMetricsLog:
         return None
 
     def staleness_mean(self) -> float:
+        """Histogram mean: average mixed-in model age in rounds (0 =
+        always fresh; negative = receivers lagged their senders)."""
         if not self.staleness_hist:
             return 0.0
         total = sum(self.staleness_hist.values())
         return sum(k * v for k, v in self.staleness_hist.items()) / total
 
     def as_arrays(self) -> Dict[str, np.ndarray]:
+        """Column-wise view for plotting/CSV (one entry per record)."""
         return {
             "t": np.array([r.t for r in self.records]),
             "round": np.array([r.rnd for r in self.records]),

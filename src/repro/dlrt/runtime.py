@@ -31,9 +31,15 @@ from .metrics import MetricsLog, RoundRecord, internode_variance
 
 @dataclass
 class RunnerConfig:
-    n_nodes: int
-    rounds: int
-    eval_every: int = 20
+    """Experiment knobs shared by every runtime (units in comments).
+
+    The first block is the paper's experiment grid; the second selects
+    and tunes the compiled superstep engine (``dlrt.compiled``); the
+    third shards that engine over a device mesh (DESIGN.md §8).
+    """
+    n_nodes: int                           # population size n
+    rounds: int                            # total training rounds
+    eval_every: int = 20                   # evaluation cadence (rounds)
     model_bytes: Optional[int] = None      # per-transfer payload (default:
                                            # actual param bytes)
     sim_every: int = 1                     # recompute stacked sims every r
@@ -45,6 +51,16 @@ class RunnerConfig:
     use_pallas: bool = False               # Pallas sim + fused mixing
     interpret: bool = False                # Pallas interpret mode (CPU)
     block_d: Optional[int] = None          # kernel D-block override
+    # Sharded superstep (compiled engine only): shard the node axis over
+    # this many devices via shard_map.  None = single-device engine;
+    # 0 = every local device; N > 0 = exactly N devices (error if the
+    # host has fewer — simulate with XLA_FLAGS=--xla_force_host_platform_
+    # device_count=N on CPU).
+    mesh_devices: Optional[int] = None
+    # Sharded mixing schedule: "gather" (row-block of W applied to the
+    # all-gathered population; bitwise-matches the single-device engine)
+    # or "psum" (partial-products reduce; f32-rounding-close).
+    collective: str = "gather"
 
 
 def make_local_step(loss_fn: Callable, optimizer: Optimizer) -> Callable:
@@ -60,6 +76,8 @@ def make_local_step(loss_fn: Callable, optimizer: Optimizer) -> Callable:
 
 
 def make_evaluator(eval_fn: Callable) -> Callable:
+    """Vmapped every-node evaluation on the shared test batch: returns
+    ``(losses [n], metrics dict of [n] arrays)``."""
     def evaluate(params, test):
         return jax.vmap(lambda p: eval_fn(p, test))(params)
     return evaluate
@@ -134,6 +152,8 @@ class DecentralizedRunner:
         return edges
 
     def evaluate(self, rnd: int, edges: np.ndarray) -> RoundRecord:
+        """Evaluate every node on the shared test set after round ``rnd``
+        and append the §IV-A4 :class:`RoundRecord`."""
         losses, metrics = self._evaluate(self.params, self.test_batch)
         rec = make_round_record(rnd, losses, metrics, self._comm_bytes,
                                 edges)
@@ -143,18 +163,40 @@ class DecentralizedRunner:
     def _make_engine(self):
         """Build the fused lax.scan engine sharing this runner's live
         params/optimizer state (dlrt.compiled; imported lazily — it
-        imports RunnerConfig from here)."""
+        imports RunnerConfig from here).
+
+        ``cfg.mesh_devices`` promotes the engine to sharded mode: the
+        node axis is sharded over a 1-D device mesh and the scan body's
+        cross-node ops run as collectives (DESIGN.md §8).  A
+        :class:`repro.data.DeviceDataStream` passed as ``batcher`` is
+        detected here and routed to the engine's in-scan batch drawing.
+        """
+        from ..launch.mesh import make_superstep_mesh
         from .compiled import CompiledSuperstep
+        mesh = None
+        if self.cfg.mesh_devices is not None:
+            mesh = make_superstep_mesh(self.cfg.mesh_devices or None)
+        stream = self.batcher if hasattr(self.batcher, "draw") else None
         return CompiledSuperstep(
             init_fn=None, loss_fn=self._loss_fn, eval_fn=self._eval_fn,
-            optimizer=self.opt, batcher=self.batcher,
+            optimizer=self.opt,
+            batcher=None if stream is not None else self.batcher,
+            data_stream=stream,
             test_batch=self.test_batch, strategy=self.strategy,
             cfg=self.cfg, use_pallas=self.cfg.use_pallas,
             interpret=self.cfg.interpret, block_d=self.cfg.block_d,
+            mesh=mesh, collective=self.cfg.collective,
             params=self.params, opt_state=self.opt_state)
 
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
             ) -> MetricsLog:
+        """Run all ``cfg.rounds`` rounds and return the metrics log.
+
+        Dispatch: ``cfg.compiled=None`` auto-selects the fused superstep
+        engine for in-graph-capable strategies (sharded when
+        ``cfg.mesh_devices`` is set) and the per-round host loop
+        otherwise; True/False force one path.  ``progress`` is invoked
+        with each evaluation's :class:`RoundRecord`."""
         use_compiled = self.cfg.compiled
         if use_compiled is None:
             use_compiled = getattr(self.strategy, "in_graph", False)
@@ -166,6 +208,11 @@ class DecentralizedRunner:
             self._comm_bytes = engine._comm_bytes
             self.log = log
             return log
+        if hasattr(self.batcher, "draw"):
+            raise TypeError(
+                "DeviceDataStream draws batches inside the compiled scan; "
+                "the per-round host loop needs a host batcher "
+                "(StackedBatcher)")
         edges = np.zeros((self.cfg.n_nodes, self.cfg.n_nodes), bool)
         for rnd in range(self.cfg.rounds):
             edges = self._round(rnd)

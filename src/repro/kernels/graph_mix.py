@@ -29,17 +29,25 @@ def _mix_kernel(w_ref, x_ref, out_ref):
 def graph_mix(w: jax.Array, x: jax.Array, *,
               block_d: int = DEFAULT_BLOCK_D,
               interpret: bool = False) -> jax.Array:
-    """``W [n, n] @ X [n, D] -> [n, D]``; D multiple of block_d."""
-    n, d = x.shape
+    """``W [m, n] @ X [n, D] -> [m, D]``; D multiple of block_d.
+
+    ``m == n`` in the single-device engine; under the sharded superstep
+    each device mixes only its own row block, so ``m = n / num_devices``
+    (``W`` is the device's row slice of the padded mixing matrix).
+    """
+    m, n = w.shape
+    nx, d = x.shape
+    if n != nx:
+        raise ValueError(f"W columns ({n}) must match X rows ({nx})")
     if d % block_d != 0:
         raise ValueError(f"D={d} not a multiple of block_d={block_d}")
     return pl.pallas_call(
         _mix_kernel,
         grid=(d // block_d,),
-        in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0)),
+        in_specs=[pl.BlockSpec((m, n), lambda i: (0, 0)),
                   pl.BlockSpec((n, block_d), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        out_specs=pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
         interpret=interpret,
     )(w, x)
 

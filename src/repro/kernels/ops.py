@@ -88,14 +88,22 @@ def model_pairwise_cosine(stacked_params, *, block_d: Optional[int] = None,
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def mix(w: jax.Array, x: jax.Array, *, block_d: Optional[int] = None,
         interpret: bool = False) -> jax.Array:
-    """``W @ X`` with D-blocking; pads/unpads n and D transparently."""
+    """``W [m, n] @ X [n, D] -> [m, D]`` with D-blocking.
+
+    Pads/unpads both node axes and D transparently.  ``W`` may be
+    rectangular: the sharded superstep passes each device's row block
+    ``[n_local, n_pad]``, so padding is applied per shard — ``m`` and
+    ``n`` are tiled up to the sublane multiple independently and the
+    result is sliced back to exact ``[m, d]``.
+    """
+    m = w.shape[0]
     n, d = x.shape
     bd = _pick_block(d, block_d)
     sl = _sublane(x.dtype)
-    wp = _pad_n(w, sl, axes=(0, 1))
+    wp = jnp.pad(w, ((0, -m % sl), (0, -n % sl)))
     xp = _pad_n(_pad_d(x, bd), sl)
     y = graph_mix(wp, xp, block_d=bd, interpret=interpret)
-    return y[:n, :d]
+    return y[:m, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
@@ -114,13 +122,16 @@ def mix_masked(edges: jax.Array, x: jax.Array, *,
 
 def mix_pytree(w: jax.Array, stacked_params, *,
                block_d: Optional[int] = None, interpret: bool = False):
-    """Apply ``W`` to every leaf of a node-stacked pytree via the kernel
-    (host-layout path; the sharded runtime uses core.mixing.apply_mixing)."""
+    """Apply ``W [m, n]`` to every leaf of a node-stacked pytree
+    (``[n, ...]`` -> ``[m, ...]``) via the kernel.  ``m < n`` is the
+    sharded-superstep case: ``w`` is one device's row block and the
+    leaves are the all-gathered full population."""
+    m = w.shape[0]
     def one(leaf):
         n = leaf.shape[0]
         flat = leaf.reshape(n, -1)
         return mix(w, flat, block_d=block_d, interpret=interpret).reshape(
-            leaf.shape).astype(leaf.dtype)
+            (m,) + leaf.shape[1:]).astype(leaf.dtype)
     return jax.tree_util.tree_map(one, stacked_params)
 
 

@@ -24,3 +24,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def mesh_chips(mesh) -> int:
     return mesh.devices.size
+
+
+def make_superstep_mesh(num_devices: int | None = None):
+    """1-D ``("data",)`` mesh for the sharded compiled superstep
+    (DESIGN.md §8): the DL **node axis** is sharded over ``data``, so
+    ``dlrt.distributed``'s node-axis heuristics (``node_axes`` /
+    ``leaf_spec``) apply unchanged.
+
+    ``num_devices=None`` uses every local device.  On CPU, simulate a
+    multi-device host with ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=8`` (set before importing jax) — the conformance tests and
+    ``benchmarks/fig10_sharded.py`` run exactly that way.
+    """
+    avail = jax.local_device_count()
+    nd = avail if num_devices is None else num_devices
+    if nd < 1 or nd > avail:
+        raise ValueError(f"num_devices={nd} not in [1, {avail}] "
+                         "(set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before importing jax to simulate "
+                         "more CPU devices)")
+    return jax.make_mesh((nd,), ("data",))

@@ -1,0 +1,40 @@
+"""Tiny MLP fixture shared by the superstep conformance tests and the
+fig9/fig10 throughput benchmarks.
+
+One hidden layer over flattened images; deliberately small so whole-
+population supersteps compile in seconds on CPU.  Kept in the package
+(rather than copy-pasted per test/benchmark) so the conformance suites
+and the benchmarks provably run the *same* workload.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_params(key, d_in: int = 192, num_classes: int = 4,
+               hidden: int = 8):
+    """One node's parameter pytree: w1 [d_in, hidden], b1 [hidden],
+    w2 [hidden, num_classes], b2 [num_classes] (f32, scaled init)."""
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (d_in, hidden)) / math.sqrt(d_in),
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, num_classes))
+            / math.sqrt(hidden),
+            "b2": jnp.zeros((num_classes,))}
+
+
+def mlp_loss(p, batch):
+    """Cross-entropy + accuracy on a ``{"images" [b, ...], "labels"
+    [b]}`` batch; returns ``(loss, {"accuracy": scalar})`` — the
+    ``loss_fn``/``eval_fn`` signature every runtime consumes."""
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    logits = h @ p["w2"] + p["b2"]
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], 1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"accuracy": acc}

@@ -67,6 +67,7 @@ P_MIX = 6
 
 @dataclass
 class AsyncConfig:
+    """Event-driven runtime knobs (durations in virtual seconds)."""
     n_nodes: int
     rounds: int                       # local rounds per node
     eval_every: int = 20              # in (min-completed) rounds
@@ -547,6 +548,11 @@ class AsyncRunner(DecentralizedRunner):
             raise RuntimeError(f"unknown event kind {kind!r}")
 
     def run(self, progress=None) -> NetMetricsLog:
+        """Drive the event loop until every live node completes
+        ``cfg.rounds`` local rounds (or ``max_events`` trips the runaway
+        guard).  Returns the wall-clock-domain log; the inherited
+        round-domain ``self.log`` is filled at the same evaluation
+        points.  ``progress`` receives each :class:`NetRecord`."""
         n = self.cfg.n_nodes
         for i in range(n):
             start = self.faults.next_up_time(i, 0.0)

@@ -47,6 +47,23 @@ def test_graph_mix_sweep(n, d, dtype):
                                np.asarray(want, np.float32), atol=atol)
 
 
+@pytest.mark.parametrize("m,n,d", [(1, 8, 512), (3, 10, 300),
+                                   (13, 104, 1000), (6, 6, 129)])
+def test_graph_mix_rectangular_row_block(m, n, d):
+    """Sharded-superstep shape: each device applies its [n_local, n_pad]
+    row block of W to the gathered [n_pad, D] population; padding is
+    per-shard (m and n tile independently) and results match the same
+    rows of the square product."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 31 + n))
+    x = jax.random.normal(k1, (n, d))
+    w_full = jax.nn.softmax(jax.random.normal(k2, (n, n)))
+    got = ops.mix(w_full[:m], x, interpret=True)
+    want = ref.graph_mix_ref(w_full, x)[:m]
+    assert got.shape == (m, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4 * np.sqrt(n))
+
+
 @pytest.mark.parametrize("n,d", [(8, 512), (16, 2048), (7, 129),
                                  (33, 300), (50, 1000)])
 @pytest.mark.parametrize("dtype", DTYPES, ids=str)

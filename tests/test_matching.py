@@ -78,6 +78,72 @@ def test_jax_degree_invariants(seed, n, k):
     assert not (edges & ~(cand & ~np.eye(n, dtype=bool))).any()
 
 
+# ---------------------------------------------------------------------------
+# Tight-market regression (ROADMAP: out-capacity == demand).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 4, 7, 11])
+def test_tight_market_fills_at_fixpoint(seed):
+    """Tight market: k_in == k_out == k with complete candidate lists, so
+    total out-capacity (n*k) exactly equals total demand (n*k).
+
+    This is the rural-hospitals-flavoured case from the ROADMAP: with the
+    old sweep safety bound (``rounds=n``) some seeds left receivers at
+    in-degree k-1 even though willing senders still had spare capacity —
+    an artifact of truncating the eviction chains, *not* a property of
+    the stable matching (independent receiver/sender scores make every
+    pair acceptable, so a deficient receiver + spare-capacity sender
+    would be a blocking pair).  With the fixpoint-sized default bound
+    (``n * k_out``) every receiver reaches exactly k.
+    """
+    n, k = 12, 3
+    rng = np.random.default_rng(seed)
+    recv = jnp.asarray(rng.random((n, n)), jnp.float32)
+    send = jnp.asarray(rng.random((n, n)), jnp.float32)
+    cand = ~jnp.eye(n, dtype=bool)
+    edges = np.asarray(match_jax(recv, send, cand, k, k))
+    assert (edges.sum(axis=1) == k).all(), \
+        f"receiver in-degrees {edges.sum(axis=1)} != {k} at fixpoint"
+    assert (edges.sum(axis=0) == k).all()
+
+
+def test_tight_market_underfills_with_truncated_sweeps():
+    """Documents the artifact the fixpoint bound fixes: truncating the
+    propose/keep sweeps at ``rounds=n`` (the old default) leaves a
+    deficient receiver in this instance while a *different* sender still
+    has spare out-capacity — i.e. the result is not even stable, so the
+    deficiency was never a genuine rural-hospitals gap.  If this test
+    ever fails, n sweeps started sufficing and the fixpoint-bound
+    comment in ``match_jax`` should be revisited."""
+    n, k = 12, 3
+    rng = np.random.default_rng(1)
+    recv = jnp.asarray(rng.random((n, n)), jnp.float32)
+    send = jnp.asarray(rng.random((n, n)), jnp.float32)
+    cand = ~jnp.eye(n, dtype=bool)
+    truncated = np.asarray(match_jax(recv, send, cand, k, k, rounds=n))
+    deficient = np.flatnonzero(truncated.sum(axis=1) < k)
+    spare = np.flatnonzero(truncated.sum(axis=0) < k)
+    assert deficient.size > 0, "n sweeps now reach the fixpoint here"
+    assert spare.size > 0
+    # the blocking pair: a deficient receiver and a spare sender that is
+    # not the receiver itself
+    assert any(j != i for i in deficient for j in spare)
+
+
+def test_tight_market_capacity_slack_also_fills():
+    """ROADMAP's alternative mitigation: one unit of out-capacity slack
+    (k_out = k + 1) fills every receiver too, at the cost of uneven
+    sender load (out-degree can exceed k)."""
+    n, k = 12, 3
+    rng = np.random.default_rng(4)
+    recv = jnp.asarray(rng.random((n, n)), jnp.float32)
+    send = jnp.asarray(rng.random((n, n)), jnp.float32)
+    cand = ~jnp.eye(n, dtype=bool)
+    edges = np.asarray(match_jax(recv, send, cand, k, k + 1))
+    assert (edges.sum(axis=1) == k).all()
+    assert (edges.sum(axis=0) <= k + 1).all()
+
+
 def test_jax_fills_when_everyone_asks():
     """With complete candidate lists, near-saturation: a node can fall
     one short only when its sole remaining supplier would be itself

@@ -8,8 +8,6 @@ trajectory* whether its rounds run one at a time through
 (allclose at f32 tolerance; the two paths schedule the same f32 ops
 through different XLA programs), same decoded metrics log.
 """
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -23,29 +21,11 @@ from repro.data import (dirichlet_partition, make_image_classification,
 from repro.data.pipeline import StackedBatcher
 from repro.dlrt import (CompiledSuperstep, DecentralizedRunner,
                         RunnerConfig, eval_boundaries)
+from repro.models.tiny import mlp_loss as _mlp_loss
+from repro.models.tiny import mlp_params as _mlp_params
 from repro.optim import sgd
 
 N, ROUNDS = 6, 11                     # covers refreshes at 0, 5, 10
-
-
-def _mlp_params(key, d_in=192, num_classes=4, hidden=8):
-    k1, k2 = jax.random.split(key)
-    return {"w1": jax.random.normal(k1, (d_in, hidden)) / math.sqrt(d_in),
-            "b1": jnp.zeros((hidden,)),
-            "w2": jax.random.normal(k2, (hidden, num_classes))
-            / math.sqrt(hidden),
-            "b2": jnp.zeros((num_classes,))}
-
-
-def _mlp_loss(p, batch):
-    x = batch["images"].reshape(batch["images"].shape[0], -1)
-    h = jax.nn.relu(x @ p["w1"] + p["b1"])
-    logits = h @ p["w2"] + p["b2"]
-    labels = batch["labels"]
-    logp = jax.nn.log_softmax(logits)
-    loss = -jnp.take_along_axis(logp, labels[:, None], 1).mean()
-    acc = (logits.argmax(-1) == labels).mean()
-    return loss, {"accuracy": acc}
 
 
 def _runner(strategy, compiled, *, rounds=ROUNDS, sim_every=1,

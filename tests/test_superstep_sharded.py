@@ -1,0 +1,229 @@
+"""Sharded superstep conformance (DESIGN.md §8).
+
+Headline contract: for the same seed, an in-graph strategy produces the
+*same trajectory* whether its rounds run
+
+* one at a time through ``DecentralizedRunner``'s host loop,
+* fused into ``lax.scan`` on a single device, or
+* fused **and sharded over a device mesh** via ``shard_map`` (node axis
+  as a mesh axis, ``graph_mix``/similarity as collectives, node padding
+  when the population doesn't divide the device count).
+
+The ``collective="gather"`` schedule computes each device's row block of
+the same contraction ``apply_mixing`` runs, so sharded trajectories are
+*bitwise* equal in practice — the assertions below still allow f32
+tolerance.  ``collective="psum"`` reorders the reduction and is checked
+allclose only.
+
+Multi-device cases need real (simulated) devices, which XLA only creates
+at backend init: ``test_spawn_multi_device_conformance`` re-runs this
+file in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_
+count=8``; the ``_multidev`` tests skip themselves when fewer than 2
+devices exist (i.e. in the outer in-process run).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import InGraphMorphStrategy, InGraphStaticStrategy
+from repro.data import (DeviceDataStream, dirichlet_partition,
+                        make_image_classification, train_test_split)
+from repro.data.pipeline import StackedBatcher
+from repro.dlrt import DecentralizedRunner, RunnerConfig
+from repro.launch.mesh import make_superstep_mesh
+from repro.models.tiny import mlp_loss as _mlp_loss
+from repro.models.tiny import mlp_params as _mlp_params
+from repro.optim import sgd
+
+N, ROUNDS = 6, 11                     # covers sim refreshes at 0, 5, 10
+MULTIDEV = jax.device_count() >= 2
+
+
+def _strategies():
+    return {
+        "morph": lambda: InGraphMorphStrategy(n=N, k=2, view_size=4,
+                                              seed=0),
+        "static": lambda: InGraphStaticStrategy(n=N, degree=3, seed=0),
+    }
+
+
+def _runner(strategy, *, compiled, mesh_devices=None, collective="gather",
+            stream=False, rounds=ROUNDS):
+    rng = np.random.default_rng(0)
+    ds = make_image_classification(400, num_classes=4, image_size=8, seed=0)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, N, 0.5, rng)
+    batcher = (DeviceDataStream(tr, parts, 8, seed=3) if stream
+               else StackedBatcher(tr, parts, 8, seed=3))
+    return DecentralizedRunner(
+        init_fn=_mlp_params, loss_fn=_mlp_loss, eval_fn=_mlp_loss,
+        optimizer=sgd(0.05), batcher=batcher,
+        test_batch={"images": te.images, "labels": te.labels},
+        strategy=strategy,
+        cfg=RunnerConfig(n_nodes=N, rounds=rounds, eval_every=5,
+                         compiled=compiled, mesh_devices=mesh_devices,
+                         collective=collective))
+
+
+def _assert_conformant(a, b, atol=1e-5):
+    assert len(a.edge_history) == len(b.edge_history)
+    for r, (ea, eb) in enumerate(zip(a.edge_history, b.edge_history)):
+        assert np.array_equal(ea, eb), f"edge sequence diverged at {r}"
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+    assert len(a.log.records) == len(b.log.records)
+    for ra, rb in zip(a.log.records, b.log.records):
+        assert ra.rnd == rb.rnd
+        assert ra.comm_bytes == rb.comm_bytes
+        assert ra.isolated == rb.isolated
+        assert ra.mean_accuracy == pytest.approx(rb.mean_accuracy,
+                                                 abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# In-process: a 1-device mesh runs the full sharded program (shard_map,
+# collectives over a size-1 axis, spec plumbing) without extra devices.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(_strategies()))
+def test_sharded_one_device_matches_host_loop(name):
+    host = _runner(_strategies()[name](), compiled=False)
+    host.run()
+    sh = _runner(_strategies()[name](), compiled=True, mesh_devices=1)
+    sh.run()
+    _assert_conformant(host, sh)
+
+
+def test_device_stream_matches_itself_across_chunking():
+    """Device-resident streaming: batches are a pure function of
+    (seed, round, node id), so two runs with different eval chunking see
+    identical data and produce identical trajectories."""
+    a = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                compiled=True, stream=True)
+    a.run()
+    b = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                compiled=True, stream=True)
+    b.cfg.eval_every = 3
+    b.run()
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_device_stream_rejects_host_loop():
+    runner = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                     compiled=False, stream=True)
+    with pytest.raises(TypeError):
+        runner.run()
+
+
+def test_mesh_devices_over_capacity_rejected():
+    with pytest.raises(ValueError):
+        make_superstep_mesh(jax.local_device_count() + 1)
+
+
+def test_bad_collective_rejected():
+    runner = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                     compiled=True, mesh_devices=1, collective="bcast")
+    with pytest.raises(ValueError):
+        runner.run()
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: run only when the backend actually has >= 2 devices.
+# ---------------------------------------------------------------------------
+
+needs_multidev = pytest.mark.skipif(
+    not MULTIDEV, reason="needs >= 2 devices (run via "
+    "test_spawn_multi_device_conformance)")
+
+
+@needs_multidev
+@pytest.mark.parametrize("name", sorted(_strategies()))
+def test_multidev_sharded_matches_host_and_single(name):
+    """Acceptance criterion: sharded == single-device compiled ==
+    host-loop for Morph + a baseline, with node padding exercised
+    (n=6 nodes over 8 devices pads to 8)."""
+    host = _runner(_strategies()[name](), compiled=False)
+    host.run()
+    single = _runner(_strategies()[name](), compiled=True)
+    single.run()
+    sh = _runner(_strategies()[name](), compiled=True,
+                 mesh_devices=jax.device_count())
+    sh.run()
+    _assert_conformant(host, single)
+    _assert_conformant(host, sh)
+    _assert_conformant(single, sh)
+
+
+@needs_multidev
+def test_multidev_psum_collective_close():
+    single = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                     compiled=True)
+    single.run()
+    ps = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                 compiled=True, mesh_devices=jax.device_count(),
+                 collective="psum")
+    ps.run()
+    _assert_conformant(single, ps, atol=1e-4)
+
+
+@needs_multidev
+def test_multidev_pallas_path_close():
+    """use_pallas under sharding routes mixing through the rectangular
+    row-block kernel (per-shard tile padding) and similarity through the
+    Gram kernel on the gathered population."""
+    ref = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                  compiled=True)
+    ref.run()
+    pal = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                  compiled=True, mesh_devices=jax.device_count())
+    pal.cfg.use_pallas = pal.cfg.interpret = True
+    pal.run()
+    for r, (ea, eb) in enumerate(zip(ref.edge_history, pal.edge_history)):
+        assert np.array_equal(ea, eb), f"edge sequence diverged at {r}"
+    for x, y in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(pal.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-4)
+
+
+@needs_multidev
+def test_multidev_device_stream_matches_single_device():
+    """In-scan batch drawing is sharding-invariant: node i's round-r
+    batch depends only on (seed, r, i), never on which device holds i."""
+    one = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                  compiled=True, stream=True)
+    one.run()
+    sh = _runner(InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+                 compiled=True, mesh_devices=jax.device_count(),
+                 stream=True)
+    sh.run()
+    _assert_conformant(one, sh)
+
+
+@pytest.mark.slow
+def test_spawn_multi_device_conformance():
+    """Re-run this file's _multidev tests on 8 simulated host devices
+    (the acceptance run; XLA device count is fixed at backend init, so it
+    needs a fresh process — several shard_map compiles, so it lives in
+    the slow tier with the other long conformance runs)."""
+    if MULTIDEV:
+        pytest.skip("already multi-device; _multidev tests ran directly")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         __file__, "-k", "multidev"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, \
+        f"multi-device run failed:\n{proc.stdout}\n{proc.stderr}"
+    assert " passed" in proc.stdout

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Fail on missing public docstrings (pydocstyle D1xx subset, stdlib-only).
+
+Walks the given packages (default: the public API surface ``src/repro/
+dlrt`` and ``src/repro/core``) and reports every public module, class,
+function and method without a docstring.  "Public" = name without a
+leading underscore, reachable without crossing a private scope; function
+bodies are never descended into.  Dataclass/NamedTuple field assignments
+don't count as missing; ``__init__`` and other dunders are exempt except
+``__init__.py`` modules themselves.
+
+Usage:  python tools/check_docstrings.py [paths...]
+Exit status: number of offenders (capped at 125), 0 when clean.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+DEFAULT_PATHS = ["src/repro/dlrt", "src/repro/core"]
+
+
+def _missing(tree: ast.Module, rel: str) -> list:
+    out = []
+    if ast.get_docstring(tree) is None:
+        out.append(f"{rel}:1: missing module docstring")
+
+    def visit(node, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                name = child.name
+                if name.startswith("_"):
+                    continue
+                if ast.get_docstring(child) is None:
+                    kind = ("class" if isinstance(child, ast.ClassDef)
+                            else "function")
+                    out.append(f"{rel}:{child.lineno}: missing {kind} "
+                               f"docstring: {prefix}{name}")
+                if isinstance(child, ast.ClassDef):
+                    visit(child, f"{prefix}{name}.")
+                # function bodies: nested defs are implementation detail
+
+    visit(tree, "")
+    return out
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv else sys.argv[1:]) or DEFAULT_PATHS
+    offenders: list = []
+    for p in paths:
+        root = Path(p)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            tree = ast.parse(f.read_text(), filename=str(f))
+            offenders.extend(_missing(tree, str(f)))
+    for line in offenders:
+        print(line)
+    if offenders:
+        print(f"\n{len(offenders)} missing docstring(s)", file=sys.stderr)
+    else:
+        print("docstrings: OK")
+    return min(len(offenders), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
