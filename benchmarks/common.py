@@ -45,6 +45,22 @@ class ExpConfig:
     view_extra: int = 2          # |R| random edges (Fig. 2: 2 suffices)
 
 
+def add_scale_args(ap, *, nodes: int = 16, rounds: int = 150,
+                   seed: int = 0, multi_nodes: bool = False):
+    """The shared experiment-scale flags (``--nodes``/``--n``,
+    ``--rounds``, ``--seed``), so paired benchmarks — fig8's
+    event-driven runs and fig11's fused-vs-event-driven comparison —
+    are invoked with *identical* configurations.  ``multi_nodes`` makes
+    ``--nodes`` accept a sweep list (fig11's n=50/100)."""
+    kw = dict(type=int, default=nodes, help="population size n")
+    if multi_nodes:
+        kw.update(nargs="+", default=[nodes])
+    ap.add_argument("--nodes", "--n", dest="nodes", **kw)
+    ap.add_argument("--rounds", type=int, default=rounds)
+    ap.add_argument("--seed", type=int, default=seed)
+    return ap
+
+
 def make_strategy(name: str, cfg: ExpConfig):
     n, k, seed = cfg.n_nodes, cfg.k, cfg.seed
     if name == "static":
@@ -58,6 +74,51 @@ def make_strategy(name: str, cfg: ExpConfig):
         return MorphProtocol(MorphConfig(
             n=n, k=k, view_size=k + cfg.view_extra, beta=cfg.beta,
             delta_r=cfg.delta_r, seed=seed))
+    raise ValueError(name)
+
+
+def tiny_mlp_experiment(n: int, seed: int = 0, batch: int = 4):
+    """Shared tiny-MLP throughput fixture (fig9/fig11): synthetic
+    dataset sized to the population, Dirichlet(0.5) shards, a
+    :class:`StackedBatcher` factory and a small test batch.  One
+    definition so the engine-comparison figures cannot silently drift
+    onto different workloads."""
+    from repro.data import (dirichlet_partition, make_image_classification,
+                            train_test_split)
+    from repro.data.pipeline import StackedBatcher
+    rng = np.random.default_rng(seed)
+    ds = make_image_classification(max(600, n * 20), num_classes=4,
+                                   image_size=8, seed=seed)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, n, 0.5, rng)
+    make_batcher = lambda: StackedBatcher(tr, parts, batch, seed=seed + 3)
+    test = {"images": te.images[:64], "labels": te.labels[:64]}
+    return tr, parts, make_batcher, test
+
+
+def make_ingraph_strategy(name: str, cfg: ExpConfig):
+    """The scan-capable twin of :func:`make_strategy`: in-graph variants
+    drivable by the compiled superstep (and, through their host
+    ``round_edges`` adapters, by every other runtime)."""
+    from repro.core import (InGraphEpidemicLocalStrategy,
+                            InGraphEpidemicStrategy,
+                            InGraphFullyConnectedStrategy,
+                            InGraphMorphStrategy, InGraphStaticStrategy)
+    n, k, seed = cfg.n_nodes, cfg.k, cfg.seed
+    if name == "static":
+        deg = k if (n * k) % 2 == 0 else k + 1
+        return InGraphStaticStrategy(n=n, degree=deg, seed=seed)
+    if name == "fully-connected":
+        return InGraphFullyConnectedStrategy(n=n)
+    if name == "el-oracle":
+        return InGraphEpidemicStrategy(n=n, k=k, seed=seed)
+    if name == "el-local":
+        return InGraphEpidemicLocalStrategy(n=n, k=k, seed=seed,
+                                            view_extra=cfg.view_extra)
+    if name == "morph":
+        return InGraphMorphStrategy(
+            n=n, k=k, view_size=k + cfg.view_extra, beta=cfg.beta,
+            delta_r=cfg.delta_r, seed=seed)
     raise ValueError(name)
 
 

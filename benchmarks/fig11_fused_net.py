@@ -1,0 +1,188 @@
+"""Fig. 11 (repo extension): the dense in-scan network model vs the
+event-driven runtime.
+
+The fig8 regimes (LAN/WAN/flaky-WAN, calibrated to arXiv:2503.11828)
+previously ran only through :class:`repro.netsim.AsyncRunner` — a host
+event loop whose per-message pricing caps populations at a few dozen
+nodes.  This benchmark runs the same profile × strategy grid through
+**both** network realizations at n=50/100:
+
+* ``fused``  — ``DecentralizedRunner`` with ``RunnerConfig.net``
+  (:class:`repro.netsim.DenseNetwork`): the whole lossy/stale round
+  fused into the compiled superstep (DESIGN.md §9);
+* ``async``  — the event-driven :class:`AsyncRunner` on the identical
+  profile, fault timeline, strategy seed and data (the
+  ``benchmarks.common.add_scale_args`` configuration shared with fig8).
+
+Reported per cell: wall-clock rounds/sec for both engines, the
+fused/async speedup (acceptance: >= 5x on ``wan`` at n=50), and the
+fidelity columns — model-transfer drop fractions and mean delivered
+staleness from each realization — so the dense model's statistical
+match is visible next to its throughput win.  Caveat for the fault
+profiles: the dense engine counts a negotiated edge toward a down or
+mid-straggle receiver as a drop (time-normalized semantics), while the
+event-driven runner instead lets that node fall behind the virtual
+clock and deliver later — so under churn the fused drop fraction is
+expectedly higher and the async staleness mean correspondingly larger.
+Relatedly, both runtimes share one fault timeline (churn windows drawn
+in ``[0, rounds * round_s]``), and the async run *outlives* it — its
+clock stretches past the horizon by latency and straggler time, so its
+tail rounds see proportionally less churn than the dense run's.  Both
+are facets of DESIGN.md §9's round- vs time-normalization contract,
+not sampling differences.  Emits ``name,key,value`` CSV rows:
+
+    fig11,<profile>/<strategy>/n<j>/<metric>,<value>
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .common import ExpConfig, add_scale_args, make_ingraph_strategy
+
+PROFILES = ("ideal", "wan", "flaky-wan")
+STRATEGIES = ("morph", "static", "el-oracle")
+
+
+def _network(profile_name: str, n: int, rounds: int, seed: int):
+    """The (profile, fault model) pair both runtimes share — fig8's
+    flaky-WAN fault mix, keyed by the same seeds."""
+    from repro.netsim import profiles
+    from repro.netsim.faults import FaultConfig, FaultModel
+    horizon = rounds * 1.0
+    profile = profiles.get_profile(profile_name, n, seed)
+    if profile_name == "flaky-wan":
+        faults = FaultModel(FaultConfig(
+            straggler_fraction=0.25, straggler_slowdown=2.0,
+            churn_fraction=0.25, crash_fraction=0.0,
+            mean_downtime_s=horizon / 8.0, horizon_s=horizon,
+            seed=seed + 1), n)
+    else:
+        faults = None
+    return profile, faults
+
+
+def _experiment(n: int, seed: int):
+    from .common import tiny_mlp_experiment
+    _, _, batcher, test = tiny_mlp_experiment(n, seed)
+    return batcher, test
+
+
+def _common_kwargs(n, seed, batcher, test, strategy):
+    from repro.models.tiny import mlp_loss, mlp_params
+    from repro.optim import sgd
+    return dict(init_fn=mlp_params, loss_fn=mlp_loss, eval_fn=mlp_loss,
+                optimizer=sgd(0.05), batcher=batcher(), test_batch=test,
+                strategy=strategy)
+
+
+def _build_fused(strategy_name: str, profile_name: str, cfg: ExpConfig):
+    from repro.dlrt import DecentralizedRunner, RunnerConfig
+    from repro.netsim import DenseNetwork
+    n, seed = cfg.n_nodes, cfg.seed
+    profile, faults = _network(profile_name, n, cfg.rounds, seed)
+    batcher, test = _experiment(n, seed)
+    return DecentralizedRunner(
+        cfg=RunnerConfig(
+            n_nodes=n, rounds=cfg.rounds, eval_every=10 ** 9, seed=seed,
+            net=DenseNetwork(profile, round_s=1.0, faults=faults)),
+        **_common_kwargs(n, seed, batcher, test,
+                         make_ingraph_strategy(strategy_name, cfg)))
+
+
+def run_fused(strategy_name: str, profile_name: str, cfg: ExpConfig):
+    """Compiled-superstep run with the dense network model, measured in
+    two passes: a throughput pass of fixed-size warmed supersteps
+    (fig9's methodology — compiles excluded, no per-round host work;
+    ``run_steps`` replays round indices, which is fine for timing but
+    not for metrics), and a separate untimed clean ``run()`` of exactly
+    ``cfg.rounds`` rounds whose ``net_stats``/accuracy are the fidelity
+    columns.  Returns ``(clean_runner, wall_seconds_per_cfg_rounds)``."""
+    chunk = max(cfg.eval_every, 1)
+    rounds = cfg.rounds - cfg.rounds % chunk
+    engine = _build_fused(strategy_name, profile_name, cfg)._make_engine()
+    engine.run_steps(chunk, chunk)        # compile + warm caches
+    t0 = time.perf_counter()
+    engine.run_steps(rounds, chunk)
+    dt = time.perf_counter() - t0
+    clean = _build_fused(strategy_name, profile_name, cfg)
+    clean.run()                           # untimed: the fidelity run
+    return clean, dt * cfg.rounds / max(rounds, 1)
+
+
+def run_async(strategy_name: str, profile_name: str, cfg: ExpConfig):
+    """Event-driven run on the identical configuration (evaluation kept
+    off the hot path, like the fused side)."""
+    from repro.netsim import AsyncConfig, AsyncRunner
+    n, seed = cfg.n_nodes, cfg.seed
+    profile, faults = _network(profile_name, n, cfg.rounds, seed)
+    batcher, test = _experiment(n, seed)
+    runner = AsyncRunner(
+        cfg=AsyncConfig(n_nodes=n, rounds=cfg.rounds,
+                        eval_every=10 ** 9, compute_time_s=1.0,
+                        mix_timeout_s=3.0, seed=seed),
+        profile=profile, faults=faults,
+        **_common_kwargs(n, seed, batcher, test,
+                         make_ingraph_strategy(strategy_name, cfg)))
+    t0 = time.perf_counter()
+    runner.run()
+    return runner, time.perf_counter() - t0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    add_scale_args(ap, nodes=50, rounds=30, multi_nodes=True)
+    ap.add_argument("--profiles", nargs="+", default=list(PROFILES),
+                    choices=list(PROFILES))
+    ap.add_argument("--strategies", nargs="+", default=list(STRATEGIES),
+                    choices=list(STRATEGIES))
+    args = ap.parse_args(argv)
+
+    speedups = {}
+    for n in args.nodes:
+        for profile_name in args.profiles:
+            for strategy_name in args.strategies:
+                cfg = ExpConfig(n_nodes=n, rounds=args.rounds,
+                                eval_every=max(args.rounds // 3, 1),
+                                seed=args.seed)
+                fused, t_f = run_fused(strategy_name, profile_name, cfg)
+                asyn, t_a = run_async(strategy_name, profile_name, cfg)
+                stats = fused.net_stats
+                total = stats["delivered"] + stats["dropped"]
+                astats = asyn.transport.stats
+                # model transfers only, so the two columns count the
+                # same message population (control packets use their own
+                # loss stream and are not modelled by the dense engine).
+                a_sent = astats.sent_by_kind.get("model", 0)
+                a_drop = astats.dropped_by_kind.get("model", 0)
+                key = f"{profile_name}/{strategy_name}/n{n}"
+                rows = {
+                    "fused_rounds_per_sec": f"{args.rounds / t_f:.1f}",
+                    "async_rounds_per_sec": f"{args.rounds / t_a:.1f}",
+                    "fused_over_async": f"{t_a / t_f:.1f}",
+                    "fused_drop_frac":
+                        f"{stats['dropped'] / max(total, 1):.4f}",
+                    "async_drop_frac":
+                        f"{a_drop / max(a_sent, 1):.4f}",
+                    "fused_staleness_mean":
+                        f"{fused.staleness_mean():.3f}",
+                    "async_staleness_mean":
+                        f"{asyn.netlog.staleness_mean():.3f}",
+                    "fused_final_acc":
+                        f"{fused.log.records[-1].mean_accuracy:.4f}",
+                    "async_final_acc":
+                        f"{asyn.log.records[-1].mean_accuracy:.4f}",
+                }
+                for metric, value in rows.items():
+                    print(f"fig11,{key}/{metric},{value}", flush=True)
+                speedups[key] = t_a / t_f
+    worst = min(speedups, key=speedups.get)
+    print(f"fig11_derived,min_fused_over_async,{speedups[worst]:.1f} "
+          f"({worst})", flush=True)
+    return speedups
+
+
+if __name__ == "__main__":
+    main()

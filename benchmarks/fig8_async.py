@@ -23,7 +23,7 @@ from repro.netsim import AsyncConfig, AsyncRunner, FaultModel, profiles
 from repro.netsim.faults import FaultConfig
 from repro.optim import sgd
 
-from .common import ExpConfig, make_strategy
+from .common import ExpConfig, add_scale_args, make_strategy
 
 PROFILES = ("lan", "wan", "flaky-wan")
 STRATEGIES = ("morph", "static", "el-oracle")
@@ -74,8 +74,7 @@ def run_async(strategy_name: str, profile_name: str, cfg: ExpConfig):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=30)
-    ap.add_argument("--nodes", type=int, default=8)
+    add_scale_args(ap, nodes=8, rounds=30)
     ap.add_argument("--target", type=float, default=0.5,
                     help="accuracy for the time-to-accuracy metric")
     args = ap.parse_args(argv)
@@ -84,7 +83,8 @@ def main(argv=None):
     for profile_name in PROFILES:
         for strategy_name in STRATEGIES:
             cfg = ExpConfig(n_nodes=args.nodes, rounds=args.rounds,
-                            eval_every=max(args.rounds // 6, 1))
+                            eval_every=max(args.rounds // 6, 1),
+                            seed=args.seed)
             runner, log = run_async(strategy_name, profile_name, cfg)
             last = log.last()
             stats = runner.transport.stats

@@ -55,21 +55,15 @@ def _mlp_loss(p, batch):
 
 
 def _build(n: int, strategy, compiled: bool, rounds: int):
-    from repro.data import (dirichlet_partition, make_image_classification,
-                            train_test_split)
-    from repro.data.pipeline import StackedBatcher
     from repro.dlrt import DecentralizedRunner, RunnerConfig
     from repro.optim import sgd
-    rng = np.random.default_rng(0)
-    ds = make_image_classification(max(600, n * 20), num_classes=4,
-                                   image_size=8, seed=0)
-    tr, te = train_test_split(ds, 0.25)
-    parts = dirichlet_partition(tr.labels, n, 0.5, rng)
-    bt = RingBatcher(StackedBatcher(tr, parts, 4, seed=3), 64)
+
+    from .common import tiny_mlp_experiment
+    _, _, make_batcher, test = tiny_mlp_experiment(n)
+    bt = RingBatcher(make_batcher(), 64)
     return DecentralizedRunner(
         init_fn=_mlp_params, loss_fn=_mlp_loss, eval_fn=_mlp_loss,
-        optimizer=sgd(0.05), batcher=bt,
-        test_batch={"images": te.images[:64], "labels": te.labels[:64]},
+        optimizer=sgd(0.05), batcher=bt, test_batch=test,
         strategy=strategy,
         cfg=RunnerConfig(n_nodes=n, rounds=rounds, eval_every=10 ** 9,
                          sim_every=5, compiled=compiled))

@@ -1,8 +1,13 @@
 """Benchmark aggregator: one section per paper table/figure plus the
 roofline + kernel microbenches.  Prints ``name,key,value`` CSV lines.
 
-  PYTHONPATH=src python -m benchmarks.run            # smoke sizes
+  PYTHONPATH=src python -m benchmarks.run            # default sizes
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale-ish
+  PYTHONPATH=src python -m benchmarks.run --smoke    # tiny CI sizes
+
+``--smoke`` shrinks every section to minutes-scale totals — numbers are
+meaningless, but every figure script executes end to end, which is what
+the CI benchmarks-smoke job runs so fig scripts can't silently rot.
 
 The roofline section reads dryrun_results.json (+ rerun*.json); run
 ``python -m repro.launch.dryrun --all --mesh both --out
@@ -20,51 +25,76 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="closer-to-paper sizes (slower)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny n/rounds: every fig script runs end to "
+                         "end in minutes (the CI benchmarks-smoke job)")
     ap.add_argument("--only", default=None,
                     help="run a single section by name")
     args = ap.parse_args(argv)
+    if args.full and args.smoke:
+        print("--full and --smoke are mutually exclusive",
+              file=sys.stderr)
+        return 2
 
-    rounds = 400 if args.full else 120
-    nodes = 32 if args.full else 16
+    def size(full, default, smoke):
+        return full if args.full else smoke if args.smoke else default
+
+    rounds = size(400, 120, 10)
+    nodes = size(32, 16, 6)
     # Table I: the diversity-selection advantage grows with population
-    # size (paper: 50/100 nodes) — run it at 32 nodes even in smoke mode.
-    t1_nodes = 64 if args.full else 32
-    t1_rounds = 400 if args.full else 200
+    # size (paper: 50/100 nodes) — keep it above the default node count.
+    t1_nodes = size(64, 32, 8)
+    t1_rounds = size(400, 200, 12)
 
     from . import (fig2_connectivity, fig3_curves, fig4_connectivity_levels,
                    fig5_ablation, fig67_isolation, fig8_async,
-                   fig9_superstep, fig10_sharded, kernel_bench, roofline,
-                   table1_accuracy)
+                   fig9_superstep, fig10_sharded, fig11_fused_net,
+                   kernel_bench, roofline, table1_accuracy)
 
     sections = [
         ("fig2", lambda: fig2_connectivity.main(
-            ["--trials", "80" if args.full else "40"])),
+            ["--trials", str(size(80, 40, 8))]
+            + (["--sizes", "16", "32"] if args.smoke else []))),
         ("fig67", lambda: fig67_isolation.main(
-            ["--rounds", "60" if args.full else "30"])),
+            ["--rounds", str(size(60, 30, 6))]
+            + (["--nodes", "24", "--ks", "3"] if args.smoke else []))),
         ("table1", lambda: table1_accuracy.main(
             ["--rounds", str(t1_rounds), "--nodes", str(t1_nodes)])),
         ("fig3", lambda: fig3_curves.main(
             ["--rounds", str(rounds), "--nodes", str(nodes)])),
         ("fig4", lambda: fig4_connectivity_levels.main(
-            ["--rounds", str(max(rounds * 2 // 3, 60)),
+            ["--rounds", str(size(rounds * 2 // 3, max(rounds * 2 // 3,
+                                                       60), rounds)),
              "--nodes", str(nodes)]
             + ([] if args.full else ["--ks", "3", "5"]))),
         ("fig5", lambda: fig5_ablation.main(
-            ["--rounds", str(max(rounds // 2, 60)),
+            ["--rounds", str(size(rounds // 2, max(rounds // 2, 60),
+                                  rounds)),
              "--nodes", str(nodes)]
             + ([] if args.full else ["--betas", "5", "500",
                                      "--deltas", "1", "25"]))),
         ("fig8", lambda: fig8_async.main(
-            ["--rounds", "60" if args.full else "18",
-             "--nodes", "16" if args.full else "8"])),
+            ["--rounds", str(size(60, 18, 6)),
+             "--nodes", str(size(16, 8, 5))])),
         ("fig9", lambda: fig9_superstep.main(
-            ["--rounds", "150" if args.full else "80"]
+            ["--rounds", str(size(150, 80, 16)),
+             "--chunk", str(size(50, 50, 8))]
             + (["--nodes", "16", "50", "100"] if args.full
+               else ["--nodes", "8"] if args.smoke
                else ["--nodes", "16", "50"]))),
         ("fig10", lambda: fig10_sharded.main(
-            ["--rounds", "60" if args.full else "40",
-             "--chunk", "20", "--devices", "1", "8"])),
-        ("kernels", lambda: kernel_bench.main([])),
+            ["--rounds", str(size(60, 40, 8)),
+             "--chunk", str(size(20, 20, 4))]
+            + (["--nodes", "12", "--devices", "1", "2"] if args.smoke
+               else ["--devices", "1", "8"]))),
+        ("fig11", lambda: fig11_fused_net.main(
+            ["--rounds", str(size(40, 30, 8))]
+            + (["--nodes", "50", "100"] if args.full
+               else ["--nodes", "6", "--profiles", "ideal", "wan",
+                     "--strategies", "morph", "el-oracle"] if args.smoke
+               else ["--nodes", "50"]))),
+        ("kernels", lambda: kernel_bench.main(
+            ["--sizes", "65536"] if args.smoke else [])),
         ("roofline", lambda: roofline.main(["--csv"])),
     ]
 

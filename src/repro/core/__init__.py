@@ -22,7 +22,8 @@ from .baselines import (TopologyStrategy, StaticStrategy,
                         FullyConnectedStrategy, EpidemicStrategy,
                         InGraphMorphStrategy, InGraphStaticStrategy,
                         InGraphFullyConnectedStrategy,
-                        InGraphEpidemicStrategy)
+                        InGraphEpidemicStrategy,
+                        InGraphEpidemicLocalStrategy)
 from .protocol import (MorphConfig, MorphProtocol, MorphNodeState,
                        ConnectRequest, ConnectAccept, ConnectReject,
                        GossipDigest, NegotiationPlan)
@@ -44,6 +45,7 @@ __all__ = [
     "TopologyStrategy", "StaticStrategy", "FullyConnectedStrategy",
     "EpidemicStrategy", "InGraphMorphStrategy", "InGraphStaticStrategy",
     "InGraphFullyConnectedStrategy", "InGraphEpidemicStrategy",
+    "InGraphEpidemicLocalStrategy",
     "MorphConfig", "MorphProtocol", "MorphNodeState",
     "ConnectRequest", "ConnectAccept", "ConnectReject", "GossipDigest",
     "NegotiationPlan",

@@ -44,8 +44,18 @@ contract additionally requires:
   ``graph_round`` — the engine owns all cross-device communication
   (parameter all_gather, mixing collective).
 
-All four ``InGraph*`` strategies satisfy this by construction; the
+All five ``InGraph*`` strategies satisfy this by construction; the
 sharded conformance tests (tests/test_superstep_sharded.py) pin it.
+
+**Lossy-network invariance** (DESIGN.md §9).  The engine applies the
+dense network model *between* ``graph_round`` and mixing: the strategy
+negotiates the intended in-edge matrix exactly as on an ideal network,
+and delivery (drops, staleness, churn) is priced afterwards by
+renormalizing the mixing weights over the edges that actually arrive.
+Because the contract already forbids a strategy from observing the
+mixed parameters inside ``graph_round`` (it sees only ``gstate``,
+``rnd`` and the similarity cache), every in-graph strategy runs under
+``RunnerConfig.net`` unchanged — no per-strategy network awareness.
 """
 from __future__ import annotations
 
@@ -78,13 +88,17 @@ class InGraphMorphStrategy:
 
     def __init__(self, n: int, k: int, view_size: Optional[int] = None,
                  beta: float = 500.0, delta_r: int = 5, seed: int = 0,
-                 sim_fn=None):
+                 sim_fn=None, k_out: Optional[int] = None):
         import jax
         import jax.numpy as jnp
         from .morph import init_state
         from .similarity import pairwise_model_similarity
         self.name = "morph-ingraph"
         self.n, self.k = n, k
+        self.k_out = k if k_out is None else k_out
+        if self.k_out < k:
+            raise ValueError("k_out must be >= k (senders need at least "
+                             "demand-matching capacity)")
         self.view_size = view_size if view_size is not None else k + 2
         self.beta, self.delta_r = beta, delta_r
         self.sim_fn = sim_fn or pairwise_model_similarity
@@ -132,7 +146,8 @@ class InGraphMorphStrategy:
             new_st, w = update_topology(
                 st, None, k=min(self.k, self.n - 1),
                 view_size=min(self.view_size, self.n - 1), beta=self.beta,
-                sim_fn=lambda _: sim)
+                sim_fn=lambda _: sim,
+                k_out=min(self.k_out, self.n - 1))
             return new_st, new_st.edges, w
 
         def reuse(st):
@@ -344,4 +359,91 @@ class InGraphEpidemicStrategy:
         edge sequence to the fused scan for a given seed)."""
         import jax.numpy as jnp
         _, edges, w = self._jit_round(self.key, jnp.asarray(rnd), None)
+        return np.asarray(edges), np.asarray(w)
+
+
+class InGraphEpidemicLocalStrategy:
+    """EL-Local with the partial view carried in graph state: each node
+    samples its ``k`` receivers only from the peers it currently knows,
+    and the view itself travels through the graph — receiving a model
+    from ``j`` teaches ``i`` that ``j`` exists (membership gossip), so
+    views densify over rounds exactly as Epidemic Learning's local
+    variant describes.  This completes the compiled baseline matrix: the
+    host :class:`EpidemicStrategy` with ``oracle=False`` models a frozen
+    partial view, while this strategy evolves it on device.
+
+    State pytree: ``(base PRNG key, [n, n] bool view mask)`` — pure
+    arrays at logical n, randomness via ``fold_in(key, rnd)``, so the
+    shard_map replication contract holds by construction.  Edge sequence
+    is a pure function of ``(seed, rnd, view history)`` and identical
+    between the host adapter and the fused scan.
+    """
+
+    name = "el-local-ingraph"
+    uniform_mixing = True
+    needs_params = False
+    in_graph = True
+    needs_sim = False
+
+    def __init__(self, n: int, k: int, seed: int = 0, view_extra: int = 2):
+        import jax
+        if not 0 < k < n:
+            raise ValueError("need 0 < k < n")
+        self.n, self.k = n, k
+        # bootstrap view: ring neighbors + view_extra random known peers
+        # per node (connected, like Morph's bootstrap requirement).
+        rng = np.random.default_rng(seed)
+        view = np.roll(np.eye(n, dtype=bool), 1, axis=1) \
+            | np.roll(np.eye(n, dtype=bool), -1, axis=1)
+        for i in range(n):
+            pool = np.flatnonzero(~view[i] & (np.arange(n) != i))
+            if len(pool) and view_extra > 0:
+                view[i, rng.choice(pool, size=min(view_extra, len(pool)),
+                                   replace=False)] = True
+        self._view0 = view
+        self.key = jax.random.PRNGKey(seed)
+        self._gstate = None
+        self._jit_round = jax.jit(self.graph_round)
+
+    def init_graph_state(self):
+        """``(key, view)``: the base PRNG key plus the [n, n] partial-view
+        mask the scan evolves."""
+        import jax.numpy as jnp
+        return self.key, jnp.asarray(self._view0)
+
+    def set_graph_state(self, gstate, sim=None):
+        """Adopt the view a compiled superstep evolved so follow-up host
+        rounds continue from it."""
+        self._gstate = gstate
+
+    def graph_round(self, gstate, rnd, sim):
+        """One round inside jit: Gumbel-top-k over each sender's *known*
+        peers only (fewer than ``k`` known peers means fewer sends), then
+        membership gossip — receivers learn their senders."""
+        import jax
+        import jax.numpy as jnp
+        from .selection import NEG_INF
+        key, view = gstate
+        n, k = self.n, min(self.k, self.n - 1)
+        eye = jnp.eye(n, dtype=bool)
+        pool = view & ~eye                  # row j = sender j's view
+        gum = jax.random.gumbel(jax.random.fold_in(key, rnd),
+                                (n, n), jnp.float32)
+        scores = jnp.where(pool, gum, NEG_INF)
+        _, idx = jax.lax.top_k(scores, k)
+        valid = jnp.take_along_axis(pool, idx, axis=-1)
+        out = jnp.zeros((n, n), bool).at[
+            jnp.arange(n)[:, None], idx].max(valid)
+        edges = out.T                       # edges[i, j]: j sends to i
+        view = view | edges                 # i now knows its senders
+        return (key, view), edges, mixing.uniform_weights_jax(edges)
+
+    def round_edges(self, rnd: int, stacked_params=None):
+        """Host adapter: drive the same jitted ``graph_round``, carrying
+        the evolving view between calls (the scan-carry twin)."""
+        import jax.numpy as jnp
+        if self._gstate is None:
+            self._gstate = self.init_graph_state()
+        self._gstate, edges, w = self._jit_round(
+            self._gstate, jnp.asarray(rnd), None)
         return np.asarray(edges), np.asarray(w)

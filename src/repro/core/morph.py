@@ -75,11 +75,15 @@ def update_topology(state: MorphGraphState,
                     beta: float,
                     match_rounds: Optional[int] = None,
                     sim_fn=pairwise_model_similarity,
+                    k_out: Optional[int] = None,
                     ) -> Tuple[MorphGraphState, jax.Array]:
     """One Δ_r negotiation: returns ``(new_state, W)``.
 
     ``sim_fn`` computes the [n, n] Eq.-3 matrix from the stacked params —
     injectable so the Pallas kernel / a cheaper probe can be swapped in.
+    ``k_out`` caps per-sender out-degree (default ``k`` — the paper's
+    tight market; ``k + 1`` is the capacity-slack alternative the fig67
+    replay evaluates).
     """
     n = state.known.shape[0]
     key, k_sel, k_tie_r, k_tie_s = jax.random.split(state.key, 4)
@@ -137,8 +141,8 @@ def update_topology(state: MorphGraphState,
                  + jnp.where(fallback, -4.0, 0.0)
                  + _tie_noise(k_tie_r, (n, n)))
     send_pref = recv_pref.T + _tie_noise(k_tie_s, (n, n))
-    edges = match_jax(recv_pref, send_pref, want | fallback, k, k,
-                      match_rounds)
+    edges = match_jax(recv_pref, send_pref, want | fallback, k,
+                      k if k_out is None else k_out, match_rounds)
 
     # --- every matched edge delivers a model this round, so the receiver
     # takes a direct Eq. 3 measurement on it (protocol: receive_model) —

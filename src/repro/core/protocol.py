@@ -113,21 +113,30 @@ class NegotiationPlan:
 class MorphConfig:
     """Morph hyper-parameters (paper defaults in comments)."""
     n: int
-    k: int                      # in-degree target == out-degree cap
+    k: int                      # in-degree target
     view_size: Optional[int] = None   # s; defaults to k + 2 random edges
     beta: float = 500.0         # softmax sharpness (paper default)
     delta_r: int = 5            # topology refresh cadence (paper default)
     history_depth: int = 5      # |H_z|
     seed: int = 0
+    # Out-degree cap.  The paper's tight market is k_out == k (total
+    # supply == total demand); k + 1 grants one slot of capacity slack —
+    # the alternative the fig67 replay measures (ROADMAP tight-market).
+    k_out: Optional[int] = None
 
     def __post_init__(self):
         if self.view_size is None:
             # Fig. 2: d_r = 2 random edges suffice to stay connected.
             self.view_size = self.k + 2
+        if self.k_out is None:
+            self.k_out = self.k
         if not (0 < self.k < self.n):
             raise ValueError("need 0 < k < n")
         if self.view_size < self.k:
             raise ValueError("view_size must be >= k")
+        if self.k_out < self.k:
+            raise ValueError("k_out must be >= k (senders need at least "
+                             "demand-matching capacity)")
 
 
 @dataclass
@@ -275,7 +284,8 @@ class MorphProtocol:
             prefs = [[j for j in pref
                       if (i, j) in delivered or j not in self.nodes[i].wanted]
                      for i, pref in enumerate(prefs)]
-        edges = deferred_acceptance(prefs, plan.sender_scores, cfg.k, cfg.k)
+        edges = deferred_acceptance(prefs, plan.sender_scores, cfg.k,
+                                    cfg.k_out)
         self.control_messages += int(edges.sum())       # accept messages
         # One accept per matched edge — including fallback-tier matches
         # (the sender must inform a receiver it is serving it), so the

@@ -55,6 +55,25 @@ properties returning the logical ``[n, ...]`` view.
 (:class:`repro.data.DeviceDataStream`) instead to keep the *entire*
 per-node shards device-resident and draw every round's batch inside the
 scan body with ``jax.random`` — no host transfer per round at all.
+
+**Dense network model** (DESIGN.md §9).  Pass ``net``
+(:class:`repro.netsim.DenseNetwork`, surfaced as ``RunnerConfig.net``)
+and the scan body prices the network *inside the fused program*: the
+carry grows a ring buffer of the last ``S`` post-step parameter
+snapshots (plus the matching last-step-round ring), per-edge delays
+(keyed jitter + model serialization) quantize to round-staleness
+indices into that buffer, Bernoulli/partition/liveness losses remove
+edges from delivery (weights renormalize into self — exactly the
+event-driven runner's per-arrival mixing), and churned-out or
+straggling nodes skip their local step on the rounds the shared fault
+timeline says they are down or mid-computation.  Per-round outputs
+extend to ``(edges, delivered, staleness histogram, staleness sum)``,
+decoded into ``net_stats`` / ``delivered_history`` at chunk exit.
+Under ``profiles.ideal()`` with no faults the ring has depth 1 and the
+whole path reduces to the vanilla engine bit-for-bit (conformance:
+tests/test_dense_net.py).  Sharded mode gathers the snapshot ring
+along the node axis exactly like the parameters (``collective="gather"``
+only).
 """
 from __future__ import annotations
 
@@ -68,12 +87,14 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import apply_mixing
+from ..core.mixing import uniform_weights_jax
 from ..data.pipeline import DeviceDataStream, StackedBatcher
 from ..kernels import ops
 from ..optim import Optimizer
 from .metrics import MetricsLog, RoundRecord
 from .runtime import (RunnerConfig, make_evaluator, make_local_step,
-                      make_round_record, stacked_model_bytes)
+                      make_round_record, net_staleness_mean,
+                      stacked_model_bytes)
 
 COLLECTIVES = ("gather", "psum")
 
@@ -129,7 +150,10 @@ class CompiledSuperstep:
     * ``use_pallas`` routes similarity through the blocked Gram kernel
       and mixing through the fused kernels (``interpret=True`` to
       execute their bodies on CPU); the default pure-jnp path is what
-      the conformance tests pit against the host loop bit-for-bit.
+      the conformance tests pit against the host loop bit-for-bit;
+    * ``net`` — optional :class:`repro.netsim.DenseNetwork`: price
+      latency/staleness/drops/churn inside the scan (module docstring;
+      requires ``collective="gather"`` when sharded).
 
     Invariants: ``params`` / ``opt_state`` expose the logical ``[n,
     ...]`` view even in sharded mode (padding is internal); the decoded
@@ -146,7 +170,8 @@ class CompiledSuperstep:
                  block_d: Optional[int] = None,
                  params=None, opt_state=None,
                  mesh=None, collective: str = "gather",
-                 data_stream: Optional[DeviceDataStream] = None):
+                 data_stream: Optional[DeviceDataStream] = None,
+                 net=None):
         if not getattr(strategy, "in_graph", False):
             raise TypeError(
                 f"strategy {getattr(strategy, 'name', strategy)!r} has no "
@@ -157,6 +182,11 @@ class CompiledSuperstep:
                              f"{COLLECTIVES}")
         if data_stream is None and batcher is None:
             raise ValueError("need a host batcher or a data_stream")
+        if net is not None and mesh is not None and collective != "gather":
+            raise ValueError("the dense network model gathers its "
+                             "snapshot ring along the node axis; use "
+                             "collective='gather' (got "
+                             f"{collective!r})")
         if data_stream is not None and data_stream.n != cfg.n_nodes:
             raise ValueError(f"data_stream covers {data_stream.n} nodes, "
                              f"config says {cfg.n_nodes}")
@@ -198,6 +228,36 @@ class CompiledSuperstep:
                     x, NamedSharding(mesh, self._leaf_pspec(x))), t)
             self._params = put(self._params)
             self._opt_state = put(self._opt_state)
+
+        # --- dense network model layout (DESIGN.md §9) ---------------------
+        self.net = net
+        self.net_stats: Optional[Dict] = None
+        self.delivered_history: list = []
+        if net is not None:
+            S = net.depth(self._model_bytes)
+            up_np, step_np = net.round_masks(cfg.rounds, n)
+            self._net_S = S
+            self._net_up = jnp.asarray(up_np)        # [rounds, n] bool
+            self._net_step = jnp.asarray(step_np)    # [rounds, n] bool
+            # snapshot ring: leaf [n_pad, S, ...] — slot d holds the
+            # post-step params from d rounds back (seeded with the
+            # initial models); lhist [n, S] mirrors each node's
+            # last-completed-step round (-1 = never stepped).
+            hist = jax.tree_util.tree_map(
+                lambda x: jnp.repeat(x[:, None], S, axis=1), self._params)
+            lhist = jnp.full((n, S), -1, jnp.int32)
+            if mesh is not None:
+                hist = jax.tree_util.tree_map(
+                    lambda x: jax.device_put(
+                        x, NamedSharding(mesh, P(self._nspec))), hist)
+                lhist = jax.device_put(lhist, NamedSharding(mesh, P()))
+            self._netstate = (hist, lhist)
+            self.net_stats = {"delivered": 0, "dropped": 0,
+                              "staleness_hist": np.zeros(S, np.int64),
+                              "staleness_sum": 0}
+        else:
+            self._net_S = 0
+            self._netstate = ()
 
         self.gstate = strategy.init_graph_state()
         self.sim = jnp.zeros((n, n), jnp.float32)
@@ -277,30 +337,182 @@ class CompiledSuperstep:
                 lambda p, s: s,
                 params_logical, sim)
 
+        # --- dense-network scan helpers (net is not None only) -------------
+        S = self._net_S
+        model_bytes = self._model_bytes
+
+        def net_select(mask, new, old):
+            # per-node where over a state pytree; scalar leaves (shared
+            # optimizer counters) always advance.
+            def one(a, b):
+                if getattr(a, "ndim", 0) == 0 or a.shape[0] != mask.shape[0]:
+                    return a
+                m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+                return jnp.where(m, a, b)
+            return jax.tree_util.tree_map(one, new, old)
+
+        def net_masks(rnd):
+            r = jnp.minimum(rnd, cfg.rounds - 1)
+            up, step = self._net_up[r], self._net_step[r]      # [n] bool
+            stal = net.staleness_matrix(rnd, n, model_bytes, S)
+            drop = net.drop_mask(rnd, n)
+            return up, step, stal, drop
+
+        def net_effective(edges, w, up, step, stal, drop):
+            """Delivery + mixing plan at logical n: which negotiated edges
+            arrive, the renormalized weights over the arrived set, the
+            ``[n, n, S]`` staleness-expanded weights and the per-round
+            staleness stats."""
+            eye = jnp.eye(n, dtype=bool)
+            active = up & step                   # receivers that mix
+            delivered = edges & ~drop & up[None, :] & active[:, None]
+            if uniform:
+                # Alg. 2 l.12 over the models that actually arrived —
+                # the same renormalization AsyncRunner._mix_one applies.
+                w_eff = uniform_weights_jax(delivered)
+            else:
+                support = delivered | eye
+                kept = w.astype(jnp.float32) * support
+                lost = (w.astype(jnp.float32) * ~support).sum(axis=1)
+                w_eff = kept + jnp.diag(lost)
+            w_eff = jnp.where(active[:, None], w_eff,
+                              jnp.eye(n, dtype=w_eff.dtype))
+            d_idx = jnp.where(eye, 0, stal)
+            onehot = d_idx[:, :, None] == jnp.arange(S)[None, None, :]
+            w_stal = w_eff[:, :, None] * onehot              # [n, n, S]
+            stale_counts = jnp.sum(onehot & delivered[:, :, None],
+                                   axis=(0, 1)).astype(jnp.int32)
+            return delivered, d_idx, w_stal, stale_counts
+
+        def net_push(params, netstate, rnd, step):
+            """Advance both rings: slot 0 becomes this round's post-step
+            snapshot / last-step round."""
+            hist, lhist = netstate
+            def one(h, p):
+                if S == 1:
+                    return p[:, None]
+                return jnp.concatenate([p[:, None], h[:, :-1]], axis=1)
+            hist = jax.tree_util.tree_map(one, hist, params)
+            last = jnp.where(step, rnd.astype(jnp.int32), lhist[:, 0])
+            lhist = last[:, None] if S == 1 else \
+                jnp.concatenate([last[:, None], lhist[:, :-1]], axis=1)
+            return hist, lhist
+
+        def net_observed(rnd, lhist, d_idx, delivered):
+            """Sum over delivered edges of the *content* staleness: this
+            round minus the sender's last completed step as of the
+            snapshot each edge delivers from."""
+            sender = jnp.broadcast_to(jnp.arange(n)[None, :], (n, n))
+            last = lhist[sender, d_idx]                      # [n, n]
+            obs = rnd.astype(jnp.int32) - last
+            return jnp.sum(jnp.where(delivered, obs, 0)).astype(jnp.int32)
+
+        def net_mix(w_stal_flat, hist):
+            """``[m, n_h * S] @ [n_h * S, ...]`` — the staleness-expanded
+            contraction, same f32/HIGHEST schedule as ``apply_mixing`` so
+            a depth-1 ring is bitwise the vanilla mix."""
+            flat = jax.tree_util.tree_map(
+                lambda l: l.reshape((l.shape[0] * l.shape[1],)
+                                    + l.shape[2:]), hist)
+            if use_pallas:
+                return ops.mix_pytree(w_stal_flat, flat, block_d=block_d,
+                                      interpret=interpret)
+            def one(leaf):
+                mixed = jnp.tensordot(w_stal_flat.astype(jnp.float32),
+                                      leaf.astype(jnp.float32),
+                                      axes=((1,), (0,)),
+                                      precision=jax.lax.Precision.HIGHEST)
+                return mixed.astype(leaf.dtype)
+            return jax.tree_util.tree_map(one, flat)
+
         def round_body(carry, xs):
             # Single-device body: identical to the pre-sharding engine.
-            params, opt_state, gstate, sim = carry
+            params, opt_state, gstate, sim, netstate = carry
             rnd, batch = xs
-            params, opt_state = local_step(params, opt_state, batch)
+            new_p, new_o = local_step(params, opt_state, batch)
+            if net is None:
+                params, opt_state = new_p, new_o
+            else:
+                up, step, stal, drop = net_masks(rnd)
+                params = net_select(step, new_p, params)
+                opt_state = net_select(step, new_o, opt_state)
             if sim_fn is not None:
                 sim = refresh_sim(rnd, params, sim)
             gstate, edges, w = strategy.graph_round(gstate, rnd, sim)
-            if use_pallas and uniform:
-                params = ops.mix_masked_pytree(edges, params,
-                                               block_d=block_d,
-                                               interpret=interpret)
-            elif use_pallas:
-                params = ops.mix_pytree(w.astype(jnp.float32), params,
-                                        block_d=block_d, interpret=interpret)
-            else:
-                params = apply_mixing(w.astype(jnp.float32), params)
-            return (params, opt_state, gstate, sim), edges
+            if net is None:
+                if use_pallas and uniform:
+                    params = ops.mix_masked_pytree(edges, params,
+                                                   block_d=block_d,
+                                                   interpret=interpret)
+                elif use_pallas:
+                    params = ops.mix_pytree(w.astype(jnp.float32), params,
+                                            block_d=block_d,
+                                            interpret=interpret)
+                else:
+                    params = apply_mixing(w.astype(jnp.float32), params)
+                return (params, opt_state, gstate, sim, netstate), edges
+            netstate = net_push(params, netstate, rnd, step)
+            delivered, d_idx, w_stal, stale_counts = net_effective(
+                edges, w, up, step, stal, drop)
+            obs_sum = net_observed(rnd, netstate[1], d_idx, delivered)
+            params = net_mix(w_stal.reshape(n, n * S), netstate[0])
+            return (params, opt_state, gstate, sim, netstate), \
+                (edges, delivered, stale_counts, obs_sum)
+
+        def pad_mask(m):
+            # logical [n] bool -> [n_pad] (padded rows behave like the
+            # vanilla engine: they step every round, receive nothing).
+            if n_pad == n:
+                return m
+            return jnp.concatenate([m, jnp.ones((n_pad - n,), bool)])
+
+        def embed_w_stal(w_stal):
+            # [n, n, S] -> [n_pad, n_pad * S]: identity tail at staleness
+            # 0, so padded rows keep their own fresh (dummy) snapshot.
+            if n_pad == n:
+                return w_stal.reshape(n, n * S)
+            wp = jnp.zeros((n_pad, n_pad, S),
+                           w_stal.dtype).at[:n, :n, :].set(w_stal)
+            tail = jnp.arange(n, n_pad)
+            wp = wp.at[tail, tail, 0].set(1.0)
+            return wp.reshape(n_pad, n_pad * S)
+
+        def round_body_sharded_net(carry, xs):
+            # Per-device net body: the snapshot ring is node-sharded like
+            # the params and all_gathered once per round — its slot 0 is
+            # this round's post-step population, so the Eq.-3 refresh
+            # reads it instead of a second params gather.
+            params, opt_state, gstate, sim, netstate = carry
+            rnd, batch = xs
+            new_p, new_o = local_step(params, opt_state, batch)
+            up, step, stal, drop = net_masks(rnd)
+            step_local = jax.lax.dynamic_slice_in_dim(
+                pad_mask(step), shard_index() * n_local, n_local, 0)
+            params = net_select(step_local, new_p, params)
+            opt_state = net_select(step_local, new_o, opt_state)
+            netstate = net_push(params, netstate, rnd, step)
+            hist_full = gather_full(netstate[0])
+            if sim_fn is not None:
+                logical = jax.tree_util.tree_map(lambda x: x[:n, 0],
+                                                 hist_full)
+                sim = refresh_sim(rnd, logical, sim)
+            gstate, edges, w = strategy.graph_round(gstate, rnd, sim)
+            delivered, d_idx, w_stal, stale_counts = net_effective(
+                edges, w, up, step, stal, drop)
+            obs_sum = net_observed(rnd, netstate[1], d_idx, delivered)
+            w_rows = jax.lax.dynamic_slice_in_dim(
+                embed_w_stal(w_stal), shard_index() * n_local, n_local, 0)
+            params = net_mix(w_rows, hist_full)
+            return (params, opt_state, gstate, sim, netstate), \
+                (edges, delivered, stale_counts, obs_sum)
 
         def round_body_sharded(carry, xs):
             # Per-device body under shard_map: params/opt_state/batch are
             # the device's [n_local, ...] shard; gstate/sim/edges stay
             # replicated at logical n.
-            params, opt_state, gstate, sim = carry
+            if net is not None:
+                return round_body_sharded_net(carry, xs)
+            params, opt_state, gstate, sim, netstate = carry
             rnd, batch = xs
             params, opt_state = local_step(params, opt_state, batch)
             full = gather_full(params) if collective == "gather" else None
@@ -330,7 +542,7 @@ class CompiledSuperstep:
                 w_cols = jax.lax.dynamic_slice_in_dim(
                     w_pad, shard_index() * n_local, n_local, 1)
                 params = mix_psum(w_cols, params)
-            return (params, opt_state, gstate, sim), edges
+            return (params, opt_state, gstate, sim, netstate), edges
 
         body = round_body_sharded if sharded else round_body
 
@@ -345,11 +557,19 @@ class CompiledSuperstep:
                 return jax.lax.scan(step, carry, rnds)
 
         if sharded:
+            net_specs = ()
+            if net is not None:
+                net_specs = (
+                    jax.tree_util.tree_map(self._leaf_pspec,
+                                           self._netstate[0]),
+                    P())                       # lhist stays replicated
             carry_specs = (
                 jax.tree_util.tree_map(self._leaf_pspec, self._params),
                 jax.tree_util.tree_map(self._leaf_pspec, self._opt_state),
                 jax.tree_util.tree_map(lambda _: P(), self.gstate),
-                P())
+                P(),
+                net_specs)
+            self._ys_specs = P() if net is None else (P(), P(), P(), P())
             if stream is None:
                 # batch stacks are [K, n_pad, b, ...]: node axis = dim 1.
                 self._batch_spec = P(None, self._nspec)
@@ -423,7 +643,8 @@ class CompiledSuperstep:
                         self._xs_specs[2], self._xs_specs[3])
         self._superstep = jax.jit(shard_map(
             self._superstep_fn, mesh=self.mesh, in_specs=in_specs,
-            out_specs=(self._carry_specs, P()), check_rep=False))
+            out_specs=(self._carry_specs, self._ys_specs),
+            check_rep=False))
         return self._superstep
 
     def _run_chunk(self, start: int, end: int) -> np.ndarray:
@@ -432,7 +653,8 @@ class CompiledSuperstep:
         logical n)."""
         k = end - start + 1
         rnds = jnp.arange(start, end + 1)
-        carry = (self._params, self._opt_state, self.gstate, self.sim)
+        carry = (self._params, self._opt_state, self.gstate, self.sim,
+                 self._netstate)
         if self.stream is None:
             host_batches = [self.batcher.next() for _ in range(k)]
             batches = {key: jnp.asarray(
@@ -444,17 +666,42 @@ class CompiledSuperstep:
                     + [(0, 0)] * (v.ndim - 2), mode="edge")
                     for key, v in batches.items()}
             fn = self._get_superstep(batches)
-            carry, edges_stack = fn(carry, rnds, batches)
+            carry, ys = fn(carry, rnds, batches)
         else:
             fn = self._get_superstep(None)
-            carry, edges_stack = fn(carry, rnds, *self._stream_args)
-        self._params, self._opt_state, self.gstate, self.sim = carry
+            carry, ys = fn(carry, rnds, *self._stream_args)
+        (self._params, self._opt_state, self.gstate, self.sim,
+         self._netstate) = carry
         if hasattr(self.strategy, "set_graph_state"):
             self.strategy.set_graph_state(self.gstate, self.sim)
+        if self.net is None:
+            edges_np = np.asarray(ys, bool)
+            self.edge_history.extend(edges_np)
+            self._comm_bytes += int(edges_np.sum()) * self._model_bytes
+            return edges_np
+        # net mode: decode (negotiated, delivered, staleness) stacks —
+        # comm bytes count the transfers that actually arrived, exactly
+        # like the event-driven runner's per-arrival accounting.
+        edges_stack, delivered_stack, stale_stack, obs_stack = ys
         edges_np = np.asarray(edges_stack, bool)
+        delivered_np = np.asarray(delivered_stack, bool)
         self.edge_history.extend(edges_np)
-        self._comm_bytes += int(edges_np.sum()) * self._model_bytes
+        self.delivered_history.extend(delivered_np)
+        n_del = int(delivered_np.sum())
+        self._comm_bytes += n_del * self._model_bytes
+        self.net_stats["delivered"] += n_del
+        self.net_stats["dropped"] += int(edges_np.sum()) - n_del
+        self.net_stats["staleness_hist"] += \
+            np.asarray(stale_stack, np.int64).sum(axis=0)
+        self.net_stats["staleness_sum"] += int(
+            np.asarray(obs_stack, np.int64).sum())
         return edges_np
+
+    def staleness_mean(self) -> float:
+        """Mean delivered content-staleness in rounds (0.0 when nothing
+        was delivered or no network model is attached) — the dense
+        counterpart of ``NetMetricsLog.staleness_mean``."""
+        return net_staleness_mean(self.net_stats)
 
     def evaluate(self, rnd: int, edges: np.ndarray) -> RoundRecord:
         """Evaluate every node on the shared test set after round ``rnd``

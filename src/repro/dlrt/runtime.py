@@ -61,6 +61,12 @@ class RunnerConfig:
     # all-gathered population; bitwise-matches the single-device engine)
     # or "psum" (partial-products reduce; f32-rounding-close).
     collective: str = "gather"
+    # Dense in-scan network model (repro.netsim.DenseNetwork): price
+    # latency/staleness/drops/churn inside the fused superstep
+    # (DESIGN.md §9).  None = idealized lockstep network.  Requires the
+    # compiled engine (an in-graph strategy) and, when sharded,
+    # collective="gather".
+    net: Optional[object] = None
 
 
 def make_local_step(loss_fn: Callable, optimizer: Optimizer) -> Callable:
@@ -87,6 +93,16 @@ def stacked_model_bytes(params, n_nodes: int) -> int:
     """Per-transfer payload: one node's slice of the stacked params."""
     return sum(x.nbytes // n_nodes
                for x in jax.tree_util.tree_leaves(params))
+
+
+def net_staleness_mean(net_stats) -> float:
+    """Mean delivered content-staleness in rounds from a dense-network
+    ``net_stats`` dict (0.0 when absent or nothing was delivered) — the
+    one formula behind both the runner's and the engine's
+    ``staleness_mean`` methods."""
+    if not net_stats or not net_stats["delivered"]:
+        return 0.0
+    return net_stats["staleness_sum"] / net_stats["delivered"]
 
 
 def make_round_record(rnd: int, losses, metrics, comm_bytes: int,
@@ -125,6 +141,9 @@ class DecentralizedRunner:
         self._eval_fn = eval_fn
         self.log = MetricsLog()
         self.edge_history: list = []       # per-round in-edge matrices
+        self.delivered_history: list = []  # per-round delivered edges
+                                           # (cfg.net runs only)
+        self.net_stats = None              # dense-network counters ditto
         self._comm_bytes = 0
         self._model_bytes = cfg.model_bytes \
             or stacked_model_bytes(self.params, cfg.n_nodes)
@@ -150,6 +169,12 @@ class DecentralizedRunner:
         self.params = self._mix(self.params, jnp.asarray(w, jnp.float32))
         self._comm_bytes += int(edges.sum()) * self._model_bytes
         return edges
+
+    def staleness_mean(self) -> float:
+        """Mean delivered content-staleness in rounds from the last
+        compiled run's dense-network counters (0.0 when no network model
+        ran or nothing was delivered)."""
+        return net_staleness_mean(self.net_stats)
 
     def evaluate(self, rnd: int, edges: np.ndarray) -> RoundRecord:
         """Evaluate every node on the shared test set after round ``rnd``
@@ -185,7 +210,7 @@ class DecentralizedRunner:
             test_batch=self.test_batch, strategy=self.strategy,
             cfg=self.cfg, use_pallas=self.cfg.use_pallas,
             interpret=self.cfg.interpret, block_d=self.cfg.block_d,
-            mesh=mesh, collective=self.cfg.collective,
+            mesh=mesh, collective=self.cfg.collective, net=self.cfg.net,
             params=self.params, opt_state=self.opt_state)
 
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
@@ -205,9 +230,17 @@ class DecentralizedRunner:
             log = engine.run(progress)
             self.params, self.opt_state = engine.params, engine.opt_state
             self.edge_history = engine.edge_history
+            self.delivered_history = engine.delivered_history
+            self.net_stats = engine.net_stats
             self._comm_bytes = engine._comm_bytes
             self.log = log
             return log
+        if self.cfg.net is not None:
+            raise TypeError(
+                "RunnerConfig.net (the dense in-scan network model) "
+                "requires the compiled superstep engine — use an "
+                "in-graph strategy, or the event-driven "
+                "repro.netsim.AsyncRunner for host-path network runs")
         if hasattr(self.batcher, "draw"):
             raise TypeError(
                 "DeviceDataStream draws batches inside the compiled scan; "

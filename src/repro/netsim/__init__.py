@@ -8,16 +8,23 @@ Layers (DESIGN.md §5):
 * :mod:`~repro.netsim.messages`  — network envelopes for the protocol
   message objects defined in :mod:`repro.core.protocol`;
 * :mod:`~repro.netsim.profiles`  — LAN / WAN / flaky-WAN presets;
+* :mod:`~repro.netsim.sampling`  — keyed per-``(seed, round, edge)``
+  draws shared by the transport and the dense model;
+* :mod:`~repro.netsim.dense`     — the vectorized round-quantized
+  network model the compiled superstep fuses into its scan
+  (DESIGN.md §9);
 * :mod:`~repro.netsim.async_runner` — the asynchronous Morph runtime.
 """
-from . import profiles
+from . import profiles, sampling
 from .async_runner import AsyncConfig, AsyncRunner
+from .dense import DenseNetwork
 from .events import Event, EventLoop
 from .faults import FaultConfig, FaultModel
 from .messages import CTRL_BYTES, ModelTransfer, Packet
 from .transport import NetworkProfile, Partition, Transport, TransportStats
 
-__all__ = ["profiles", "AsyncConfig", "AsyncRunner", "Event", "EventLoop",
+__all__ = ["profiles", "sampling", "AsyncConfig", "AsyncRunner",
+           "DenseNetwork", "Event", "EventLoop",
            "FaultConfig", "FaultModel", "CTRL_BYTES", "ModelTransfer",
            "Packet", "NetworkProfile", "Partition", "Transport",
            "TransportStats"]

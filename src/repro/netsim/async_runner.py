@@ -110,7 +110,7 @@ class AsyncRunner(DecentralizedRunner):
         self.faults = faults if faults is not None else FaultModel.none(n)
         self.profile = profile if profile is not None else profiles.ideal()
         self.transport = Transport(self.profile, self.loop,
-                                   faults=self.faults)
+                                   faults=self.faults, n_nodes=n)
         self.netlog = NetMetricsLog()
         self._jrng = np.random.default_rng(cfg.seed + 0x5EED)
 
@@ -307,7 +307,7 @@ class AsyncRunner(DecentralizedRunner):
         for req in plan.requests:
             pkt = self.transport.send(req.receiver, req.sender, "request",
                                       req, CTRL_BYTES,
-                                      phase=P_CTRL_DELIVER)
+                                      phase=P_CTRL_DELIVER, rnd=rnd)
             if pkt is None:
                 self._mark_unclean(rnd)
             else:
@@ -321,10 +321,10 @@ class AsyncRunner(DecentralizedRunner):
             plan, delivered=self._neg_delivered)
         for msg in accepts:
             self.transport.send(msg.sender, msg.receiver, "accept", msg,
-                                CTRL_BYTES, phase=P_CTRL_DELIVER)
+                                CTRL_BYTES, phase=P_CTRL_DELIVER, rnd=rnd)
         for msg in rejects:
             self.transport.send(msg.sender, msg.receiver, "reject", msg,
-                                CTRL_BYTES, phase=P_CTRL_DELIVER)
+                                CTRL_BYTES, phase=P_CTRL_DELIVER, rnd=rnd)
         self._neg_plan = None
         self._install_edges(rnd, np.array(edges, dtype=bool),
                             uniform_weights(edges))
@@ -350,7 +350,7 @@ class AsyncRunner(DecentralizedRunner):
                         if self._is_morph else None))
             pkt = self.transport.send(j, node, "model", transfer,
                                       self._model_bytes,
-                                      phase=P_MODEL_DELIVER)
+                                      phase=P_MODEL_DELIVER, rnd=rnd)
             if pkt is None:
                 self._mark_unclean(rnd)
             else:

@@ -1,0 +1,122 @@
+"""Dense-state network model for the compiled superstep (DESIGN.md §9).
+
+The event-driven runtime (:mod:`repro.netsim.async_runner`, §5) prices
+every message individually on a host event loop — exact, but orders of
+magnitude slower than the fused scan.  :class:`DenseNetwork` is the
+vectorized, round-quantized approximation: the same
+:class:`~repro.netsim.transport.NetworkProfile` /
+:class:`~repro.netsim.faults.FaultModel` inputs, expressed as pure
+``[n, n]`` / ``[n]`` arrays a ``lax.scan`` body can consume.
+
+**Round slots.**  One scan round models one virtual time slot of
+``round_s`` seconds (the event-driven ``compute_time_s``): fast nodes
+complete one local round per slot, a straggler with compute multiplier
+``c`` every ``c`` slots, a churned-out node none (its parameters freeze
+until it rejoins, exactly like the event-driven defer-to-recovery path).
+
+**Staleness quantization.**  An edge whose delay (base latency + keyed
+jitter + model serialization) fits inside one slot delivers *fresh*
+parameters — event-driven receivers wait for in-flight models, so
+sub-slot delays cost wall-clock, not staleness.  Delays beyond a slot
+deliver from ``s = floor(delay / round_s)`` rounds back: the engine
+carries a ring buffer of the last ``S`` post-step parameter snapshots
+and mixing consumes the stale rows.  ``S`` (:meth:`depth`) is the
+largest reachable staleness plus one, capped by ``max_staleness`` —
+the bounded-staleness clamp.
+
+**Drops.**  Bernoulli loss (keyed per ``(seed, round, edge)``, the same
+draws the transport makes — :mod:`repro.netsim.sampling`), partition
+windows, and down endpoints all remove the edge from this round's
+delivery; uniform-averaging strategies renormalize over the arrived set
+and fixed-W strategies fold the missing mass into self-weight, mirroring
+``AsyncRunner._mix_one``.
+
+All randomness is keyed by ``(profile.seed, round, edge)`` and the fault
+timeline is materialized host-side from its seed, so trajectories are
+invariant to chunk boundaries and shard counts.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import sampling
+from .faults import FaultModel
+from .transport import NetworkProfile
+
+
+class DenseNetwork:
+    """Pure-array network model threaded through the compiled superstep
+    (``CompiledSuperstep(net=...)`` / ``RunnerConfig.net``).
+
+    Parameters: ``profile`` — the :class:`NetworkProfile` (single source
+    of truth, shared with the event-driven :class:`Transport`);
+    ``round_s`` — virtual seconds per scan round (the event-driven
+    ``compute_time_s``); ``faults`` — optional :class:`FaultModel` for
+    churn/straggler masks; ``max_staleness`` — ring-buffer depth cap
+    (delays quantizing beyond it clamp to the oldest snapshot).
+    """
+
+    def __init__(self, profile: NetworkProfile, *, round_s: float = 1.0,
+                 faults: Optional[FaultModel] = None,
+                 max_staleness: int = 8):
+        if round_s <= 0.0:
+            raise ValueError("round_s must be positive")
+        if max_staleness < 1:
+            raise ValueError("max_staleness must be >= 1")
+        self.profile = profile
+        self.round_s = float(round_s)
+        self.faults = faults
+        self.max_staleness = int(max_staleness)
+
+    # -- static layout ------------------------------------------------------
+
+    def depth(self, model_bytes: int) -> int:
+        """Ring-buffer depth ``S``: 1 + the largest reachable quantized
+        staleness for a ``model_bytes`` payload, capped at
+        ``max_staleness``.  Static (shapes the scan carry)."""
+        p = self.profile
+        worst = p.base_latency_s + p.jitter_s \
+            + p.transfer_seconds(model_bytes)
+        return 1 + min(self.max_staleness - 1,
+                       int(math.floor(worst / self.round_s)))
+
+    # -- per-round arrays (jit-safe, ``rnd`` may be traced) -----------------
+
+    def staleness_matrix(self, rnd, n: int, model_bytes: int,
+                         depth: int) -> jnp.ndarray:
+        """``[n, n]`` int32: how many rounds back edge j→i delivers from
+        this round (0 = fresh; clamped to ``depth - 1``)."""
+        lat = sampling.latency_matrix(self.profile, rnd, n, model_bytes)
+        s = jnp.floor(lat / self.round_s).astype(jnp.int32)
+        s = jnp.clip(s, 0, depth - 1)
+        return jnp.where(jnp.eye(n, dtype=bool), 0, s)
+
+    def drop_mask(self, rnd, n: int) -> jnp.ndarray:
+        """``[n, n]`` bool: edges the network eats this round (Bernoulli
+        loss + partition windows; endpoint liveness is separate)."""
+        lost = sampling.drop_matrix(self.profile, rnd, n,
+                                    sampling.STREAM_DROP_MODEL)
+        if self.profile.partitions:
+            t = rnd * self.round_s
+            lost = lost | sampling.partition_matrix(self.profile, t, n)
+        return lost
+
+    # -- fault timeline (host precompute, passed to the scan as constants) --
+
+    def round_masks(self, rounds: int, n: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """``(up [rounds, n], step [rounds, n])`` bool numpy arrays from
+        the seeded fault timeline — all-True when no faults are set."""
+        if self.faults is None:
+            ones = np.ones((rounds, n), bool)
+            return ones, ones
+        if self.faults.n != n:
+            raise ValueError(f"fault model covers {self.faults.n} nodes, "
+                             f"engine has {n}")
+        up = self.faults.round_up_masks(rounds, self.round_s)
+        return up, self.faults.round_step_masks(rounds, self.round_s,
+                                                up=up)

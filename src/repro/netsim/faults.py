@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -87,3 +87,34 @@ class FaultModel:
 
     def ever_down(self) -> List[int]:
         return [i for i in range(self.n) if self._down[i]]
+
+    # -- round-quantized views (dense in-scan network model, DESIGN.md §9)
+
+    def up_mask_at(self, t: float) -> np.ndarray:
+        """``[n]`` bool: which nodes are up at virtual time ``t``."""
+        return np.array([self.is_up(i, t) for i in range(self.n)])
+
+    def round_up_masks(self, rounds: int, round_s: float) -> np.ndarray:
+        """``[rounds, n]`` bool: liveness sampled at each round's start
+        (``t = r * round_s``) — the churn timeline the dense network
+        model consumes, materialized from the same seeded windows the
+        event-driven transport checks continuously."""
+        return np.stack([self.up_mask_at(r * round_s)
+                         for r in range(rounds)])
+
+    def round_step_masks(self, rounds: int, round_s: float,
+                         up: Optional[np.ndarray] = None) -> np.ndarray:
+        """``[rounds, n]`` bool: which nodes *complete a local step* in
+        each round slot.  A straggler with compute multiplier ``c``
+        finishes a local round every ``c`` slots (it steps in slot ``r``
+        iff ``floor((r+1)/c) > floor(r/c)``), so over ``R`` slots it
+        completes ``~R/c`` rounds — the same time-normalized progress the
+        event-driven runtime realizes by letting it fall behind the
+        virtual clock.  Down slots never step; pass a precomputed
+        ``round_up_masks`` result as ``up`` to avoid re-deriving it."""
+        r = np.arange(rounds, dtype=np.float64)[:, None]
+        c = np.maximum(self._slowdown[None, :], 1.0)
+        steps = np.floor((r + 1.0) / c) > np.floor(r / c)
+        if up is None:
+            up = self.round_up_masks(rounds, round_s)
+        return steps & up

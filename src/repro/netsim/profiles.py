@@ -11,6 +11,12 @@ Three deployment regimes, loosely calibrated to the measurement study in
 
 ``ideal()`` is the zero-latency, zero-loss network under which the async
 runtime must reproduce the synchronous runner bit-for-bit.
+
+Every profile feeds **both** network realizations unchanged: the
+event-driven :class:`~repro.netsim.Transport` and, via
+:func:`dense_network`, the in-scan dense model
+(:class:`~repro.netsim.dense.DenseNetwork`, DESIGN.md §9) — same seeds,
+same keyed per-edge draws.
 """
 from __future__ import annotations
 
@@ -61,6 +67,18 @@ def get_profile(name: str, n_nodes: int, seed: int = 0) -> NetworkProfile:
         return flaky_wan(n_nodes, seed=seed)
     raise ValueError(f"unknown profile {name!r}; "
                      f"valid: ideal, lan, wan, flaky-wan")
+
+
+def dense_network(name: str, n_nodes: int, *, round_s: float = 1.0,
+                  faults: Optional[FaultModel] = None,
+                  max_staleness: int = 8, seed: int = 0):
+    """The named profile as an in-scan dense model
+    (:class:`~repro.netsim.dense.DenseNetwork`): pass the result as
+    ``RunnerConfig.net`` to run latency/drop/staleness sweeps fused."""
+    from .dense import DenseNetwork
+    return DenseNetwork(get_profile(name, n_nodes, seed),
+                        round_s=round_s, faults=faults,
+                        max_staleness=max_staleness)
 
 
 def churny_faults(n_nodes: int, horizon_s: float,

@@ -1,0 +1,93 @@
+"""Keyed network randomness shared by both network models (DESIGN.md §9).
+
+Every stochastic network effect — latency jitter, Bernoulli message loss
+— is drawn from a counter-based PRNG keyed by ``(profile.seed, round,
+edge)``:
+
+    key_r   = fold_in(PRNGKey(profile.seed), round)
+    stream  = fold_in(key_r, STREAM_*)           # jitter vs model vs ctrl
+    draw    = uniform(stream, (n, n))[receiver, sender]
+
+This makes :class:`~repro.netsim.transport.NetworkProfile` the single
+source of truth: the event-driven :class:`~repro.netsim.Transport`
+(host, one message at a time) and the dense in-scan model
+(:class:`~repro.netsim.dense.DenseNetwork`, whole ``[n, n]`` matrices
+inside ``lax.scan``) read the *same* per-edge numbers for the same
+profile seed — pinned by ``tests/test_dense_net.py``.  Because a draw
+depends only on ``(seed, round, edge)`` and never on carried state, the
+sequence is invariant to chunking (which superstep a round lands in) and
+to sharding (every device recomputes identical replicated matrices).
+
+Matrix orientation follows the repo's edge convention: entry ``[i, j]``
+belongs to the edge *j sends to i* (receiver row, sender column).
+
+All functions are pure jax and accept a traced ``rnd`` (scan body) or a
+concrete int (host transport) interchangeably.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Independent sub-streams per round: jitter draws must not be correlated
+# with drop draws, and a control packet's drop coin must differ from the
+# model transfer's on the same edge in the same round.
+STREAM_JITTER = 0
+STREAM_DROP_MODEL = 1
+STREAM_DROP_CTRL = 2
+
+
+def round_key(seed: int, rnd) -> jax.Array:
+    """Base key for one round's network draws: ``fold_in(seed, rnd)``."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), rnd)
+
+
+def jitter_matrix(profile, rnd, n: int) -> jax.Array:
+    """Per-edge latency jitter seconds, ``[n, n]`` f32 uniform in
+    ``[0, profile.jitter_s)`` — entry ``[i, j]`` = edge j→i."""
+    if profile.jitter_s <= 0.0:
+        return jnp.zeros((n, n), jnp.float32)
+    key = jax.random.fold_in(round_key(profile.seed, rnd), STREAM_JITTER)
+    return jax.random.uniform(key, (n, n), jnp.float32) * profile.jitter_s
+
+
+def latency_matrix(profile, rnd, n: int, size_bytes: int) -> jax.Array:
+    """Total per-edge delay seconds for a ``size_bytes`` payload:
+    base latency + keyed jitter + serialization time, ``[n, n]`` f32.
+
+    The deterministic part is pre-folded to one f32 constant so the sum
+    is a single add — bitwise identical whether evaluated eagerly or
+    inside a jitted scan (XLA would otherwise reassociate)."""
+    import numpy as np
+    fixed = np.float32(profile.base_latency_s
+                       + profile.transfer_seconds(size_bytes))
+    return fixed + jitter_matrix(profile, rnd, n)
+
+
+def drop_matrix(profile, rnd, n: int,
+                stream: int = STREAM_DROP_MODEL) -> jax.Array:
+    """Bernoulli loss mask ``[n, n]`` bool (True = the network eats the
+    message on edge j→i this round)."""
+    if profile.drop_rate <= 0.0:
+        return jnp.zeros((n, n), bool)
+    key = jax.random.fold_in(round_key(profile.seed, rnd), stream)
+    u = jax.random.uniform(key, (n, n), jnp.float32)
+    return u < profile.drop_rate
+
+
+def partition_matrix(profile, t, n: int) -> jax.Array:
+    """Deterministic partition-block mask ``[n, n]`` bool at virtual time
+    ``t`` (True = the edge crosses a partition window and is blocked).
+    ``t`` may be traced; the group structure is static."""
+    blocked = jnp.zeros((n, n), bool)
+    for part in profile.partitions:
+        # an edge passes only when both endpoints share a group; nodes in
+        # no group are unreachable for the window (Partition.blocks).
+        same = jnp.zeros((n, n), bool)
+        for g in part.groups:
+            idx = jnp.asarray(sorted(g), jnp.int32)
+            one = jnp.zeros((n,), bool).at[idx].set(True)
+            same = same | (one[:, None] & one[None, :])
+        active = (part.start <= t) & (t < part.end)
+        blocked = blocked | (active & ~same)
+    return blocked

@@ -15,6 +15,15 @@ instead of deadlocking.
 The transport keeps its own RNG so network randomness never perturbs
 protocol RNG streams: a zero-latency, zero-loss profile is *exactly* the
 idealized network the synchronous runner assumes.
+
+Randomness comes in two flavours.  When the caller supplies the round a
+message belongs to (``send(..., rnd=r)``, which the async runner always
+does), jitter and loss are drawn from the **keyed sampler**
+(:mod:`repro.netsim.sampling`): a pure function of ``(profile.seed,
+round, edge)``, shared bit-for-bit with the dense in-scan network model
+(DESIGN.md §9) so the two network realizations price the same edge the
+same way.  Without a round the transport falls back to its sequential
+numpy RNG (same distributions, stream-positional draws).
 """
 from __future__ import annotations
 
@@ -72,60 +81,104 @@ class TransportStats:
     dropped: int = 0
     bytes_sent: int = 0
     bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    sent_by_kind: Dict[str, int] = field(default_factory=dict)
+    dropped_by_kind: Dict[str, int] = field(default_factory=dict)
     in_flight: int = 0
     peak_in_flight: int = 0
 
 
 class Transport:
     def __init__(self, profile: NetworkProfile, loop: EventLoop,
-                 faults=None, deliver_phase: int = 0):
+                 faults=None, deliver_phase: int = 0,
+                 n_nodes: Optional[int] = None):
         self.profile = profile
         self.loop = loop
         self.faults = faults
         self.deliver_phase = deliver_phase
+        self.n_nodes = n_nodes            # enables the keyed sampler path
         self.stats = TransportStats()
         self._rng = np.random.default_rng(profile.seed)
+        self._keyed_cache: Dict[Tuple[int, int], np.ndarray] = {}
 
     # -- helpers -----------------------------------------------------------
 
     def _up(self, node: int, t: float) -> bool:
         return self.faults is None or self.faults.is_up(node, t)
 
-    def _latency(self) -> float:
-        p = self.profile
-        lat = p.base_latency_s
-        if p.jitter_s > 0.0:
-            lat += float(self._rng.uniform(0.0, p.jitter_s))
-        return lat
+    def _keyed(self, rnd: int, stream: int) -> np.ndarray:
+        """Per-round keyed draw matrix (jitter seconds or drop coins),
+        shared with the dense model; cached, bounded."""
+        from . import sampling
+        key = (rnd, stream)
+        hit = self._keyed_cache.get(key)
+        if hit is not None:
+            return hit
+        n = self.n_nodes
+        if stream == sampling.STREAM_JITTER:
+            mat = np.asarray(sampling.jitter_matrix(self.profile, rnd, n))
+        else:
+            mat = np.asarray(sampling.drop_matrix(self.profile, rnd, n,
+                                                  stream))
+        if len(self._keyed_cache) > 16:
+            self._keyed_cache.pop(next(iter(self._keyed_cache)))
+        self._keyed_cache[key] = mat
+        return mat
 
-    def _lost(self, t_send: float, t_deliver: float,
-              src: int, dst: int) -> bool:
+    def _latency(self, rnd: Optional[int], src: int, dst: int) -> float:
+        p = self.profile
+        if p.jitter_s <= 0.0:
+            return p.base_latency_s
+        if rnd is not None and self.n_nodes is not None:
+            from . import sampling
+            jit = float(self._keyed(rnd, sampling.STREAM_JITTER)[dst, src])
+        else:
+            jit = float(self._rng.uniform(0.0, p.jitter_s))
+        return p.base_latency_s + jit
+
+    def _dropped(self, rnd: Optional[int], kind: str,
+                 src: int, dst: int) -> bool:
+        p = self.profile
+        if p.drop_rate <= 0.0:
+            return False
+        if rnd is not None and self.n_nodes is not None:
+            from . import sampling
+            stream = sampling.STREAM_DROP_MODEL if kind == "model" \
+                else sampling.STREAM_DROP_CTRL
+            return bool(self._keyed(rnd, stream)[dst, src])
+        return bool(self._rng.random() < p.drop_rate)
+
+    def _lost(self, t_send: float, t_deliver: float, src: int, dst: int,
+              rnd: Optional[int] = None, kind: str = "model") -> bool:
         p = self.profile
         if any(part.blocks(t_send, src, dst) for part in p.partitions):
             return True
         if not self._up(src, t_send) or not self._up(dst, t_deliver):
             return True
-        if p.drop_rate > 0.0 and self._rng.random() < p.drop_rate:
-            return True
-        return False
+        return self._dropped(rnd, kind, src, dst)
 
     # -- API ---------------------------------------------------------------
 
     def send(self, src: int, dst: int, kind: str, payload: Any,
-             size_bytes: int, phase: Optional[int] = None
-             ) -> Optional[Packet]:
+             size_bytes: int, phase: Optional[int] = None,
+             rnd: Optional[int] = None) -> Optional[Packet]:
         """Route one message; returns the in-flight packet, or ``None``
         when the network ate it (loss, partition, dead endpoint).
-        ``phase`` overrides the delivery event's intra-instant phase."""
+        ``phase`` overrides the delivery event's intra-instant phase;
+        ``rnd`` keys jitter/loss draws by ``(seed, round, edge)`` (the
+        draws the dense model makes) instead of the sequential RNG."""
         t = self.loop.now
-        deliver_at = t + self._latency() \
+        deliver_at = t + self._latency(rnd, src, dst) \
             + self.profile.transfer_seconds(size_bytes)
         self.stats.sent += 1
         self.stats.bytes_sent += size_bytes
         self.stats.bytes_by_kind[kind] = \
             self.stats.bytes_by_kind.get(kind, 0) + size_bytes
-        if self._lost(t, deliver_at, src, dst):
+        self.stats.sent_by_kind[kind] = \
+            self.stats.sent_by_kind.get(kind, 0) + 1
+        if self._lost(t, deliver_at, src, dst, rnd=rnd, kind=kind):
             self.stats.dropped += 1
+            self.stats.dropped_by_kind[kind] = \
+                self.stats.dropped_by_kind.get(kind, 0) + 1
             return None
         pkt = Packet(src=src, dst=dst, kind=kind, payload=payload,
                      size_bytes=size_bytes, sent_at=t,

@@ -1,0 +1,341 @@
+"""Dense in-scan network model (DESIGN.md §9).
+
+Headline contracts:
+
+* **Shared sampling** — the event-driven :class:`Transport` and the
+  dense model draw *identical* per-``(seed, round, edge)`` jitter and
+  loss numbers for the same :class:`NetworkProfile`, and the draws are
+  pure functions of ``(seed, round, edge)`` — invariant to jit, chunk
+  boundaries and evaluation order.
+* **Ideal conformance** — ``CompiledSuperstep(net=DenseNetwork(ideal))``
+  is bit-identical (edge sequence, parameters, comm bytes, metrics) to
+  the vanilla compiled engine, and matches :class:`AsyncRunner` on the
+  ideal network (exact edges; params at the repo's established f32
+  cross-engine tolerance).
+* **Lossy fidelity** — drop fractions statistically match the
+  event-driven runtime for the same profile; staleness quantizes to
+  ``floor(delay / round_s)``.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (InGraphEpidemicLocalStrategy,
+                        InGraphEpidemicStrategy, InGraphMorphStrategy,
+                        InGraphStaticStrategy)
+from repro.data import (dirichlet_partition, make_image_classification,
+                        train_test_split)
+from repro.data.pipeline import StackedBatcher
+from repro.dlrt import DecentralizedRunner, RunnerConfig
+from repro.models.tiny import mlp_loss as _mlp_loss
+from repro.models.tiny import mlp_params as _mlp_params
+from repro.netsim import (AsyncConfig, AsyncRunner, DenseNetwork,
+                          EventLoop, NetworkProfile, Transport, profiles,
+                          sampling)
+from repro.netsim.faults import FaultConfig, FaultModel
+from repro.optim import sgd
+
+N, ROUNDS = 6, 11                     # covers refreshes at 0, 5, 10
+
+
+# ---------------------------------------------------------------------------
+# shared keyed sampling
+# ---------------------------------------------------------------------------
+
+def test_transport_and_dense_share_keyed_draws():
+    """Same profile seed => the transport's per-message jitter/loss draws
+    are exactly the dense model's matrix entries."""
+    n = 8
+    prof = NetworkProfile(name="t", base_latency_s=0.05, jitter_s=0.04,
+                          bandwidth_bps=1e8, drop_rate=0.3, seed=11)
+    for rnd in (0, 3, 7):
+        jit_m = np.asarray(sampling.jitter_matrix(prof, rnd, n))
+        drop_m = np.asarray(sampling.drop_matrix(
+            prof, rnd, n, sampling.STREAM_DROP_MODEL))
+        loop = EventLoop()
+        tr = Transport(prof, loop, n_nodes=n)
+        for src, dst in [(0, 1), (2, 5), (7, 3), (4, 4 - 1)]:
+            pkt = tr.send(src, dst, "model", None, 1000, rnd=rnd)
+            if drop_m[dst, src]:
+                assert pkt is None
+            else:
+                expect = prof.base_latency_s + float(jit_m[dst, src]) \
+                    + prof.transfer_seconds(1000)
+                assert pkt is not None
+                assert pkt.deliver_at == pytest.approx(expect, rel=1e-6)
+    # control packets use an independent stream
+    ctrl = np.asarray(sampling.drop_matrix(prof, 3, n,
+                                           sampling.STREAM_DROP_CTRL))
+    model = np.asarray(sampling.drop_matrix(prof, 3, n,
+                                            sampling.STREAM_DROP_MODEL))
+    assert not np.array_equal(ctrl, model)
+
+
+def test_keyed_draws_pure_in_round_and_jit_invariant():
+    """Draws depend only on (seed, round, edge): identical under jit with
+    a traced round, inside a scan, and across repeated evaluation."""
+    prof = profiles.flaky_wan(6, seed=4)
+    # the raw draws are bitwise jit-invariant ...
+    host_j = np.asarray(sampling.jitter_matrix(prof, 5, 6))
+    jit_j = jax.jit(lambda r: sampling.jitter_matrix(prof, r, 6))(5)
+    np.testing.assert_array_equal(host_j, np.asarray(jit_j))
+    # ... the composed latency only up to one f32 ulp (XLA may fuse the
+    # jitter multiply-add into an FMA); within a jitted program — where
+    # staleness is actually quantized — it is deterministic, which the
+    # engine-level chunk/shard invariance tests pin bitwise.
+    host = np.asarray(sampling.latency_matrix(prof, 5, 6, 1234))
+    jitted = jax.jit(
+        lambda r: sampling.latency_matrix(prof, r, 6, 1234))(5)
+    np.testing.assert_allclose(host, np.asarray(jitted), rtol=3e-7)
+
+    def body(_, r):
+        return None, sampling.drop_matrix(prof, r, 6,
+                                          sampling.STREAM_DROP_MODEL)
+    _, scanned = jax.lax.scan(body, None, jnp.arange(8))
+    for r in range(8):
+        np.testing.assert_array_equal(
+            np.asarray(scanned[r]),
+            np.asarray(sampling.drop_matrix(prof, r, 6,
+                                            sampling.STREAM_DROP_MODEL)))
+
+
+def test_fault_model_round_masks():
+    """Round-quantized fault views: stragglers step every c-th slot, down
+    windows mask both up and step."""
+    fm = FaultModel(FaultConfig(straggler_fraction=0.5,
+                                straggler_slowdown=2.0), n=8)
+    step = fm.round_step_masks(20, 1.0)
+    up = fm.round_up_masks(20, 1.0)
+    assert up.all()                          # no churn configured
+    for i in range(8):
+        frac = step[:, i].mean()
+        if fm.compute_multiplier(i) == 1.0:
+            assert frac == 1.0
+        else:
+            assert frac == pytest.approx(0.5, abs=0.05)
+    churn = FaultModel(FaultConfig(churn_fraction=1.0, crash_fraction=1.0,
+                                   horizon_s=5.0, seed=0), n=4)
+    up = churn.round_up_masks(10, 1.0)
+    assert not up[-1].any()                  # everyone crashed for good
+    assert not churn.round_step_masks(10, 1.0)[-1].any()
+
+
+# ---------------------------------------------------------------------------
+# engine harness
+# ---------------------------------------------------------------------------
+
+STRATEGIES = {
+    "morph": lambda: InGraphMorphStrategy(n=N, k=2, view_size=4, seed=0),
+    "static": lambda: InGraphStaticStrategy(n=N, degree=3, seed=0),
+    "epidemic": lambda: InGraphEpidemicStrategy(n=N, k=2, seed=0),
+    "el-local": lambda: InGraphEpidemicLocalStrategy(n=N, k=2, seed=0),
+}
+
+
+def _data():
+    rng = np.random.default_rng(0)
+    ds = make_image_classification(400, num_classes=4, image_size=8, seed=0)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, N, 0.5, rng)
+    return tr, te, parts
+
+
+def _runner(strategy, *, net=None, rounds=ROUNDS, eval_every=5,
+            mesh_devices=None, compiled=True):
+    tr, te, parts = _data()
+    return DecentralizedRunner(
+        init_fn=_mlp_params, loss_fn=_mlp_loss, eval_fn=_mlp_loss,
+        optimizer=sgd(0.05),
+        batcher=StackedBatcher(tr, parts, 8, seed=3),
+        test_batch={"images": te.images, "labels": te.labels},
+        strategy=strategy,
+        cfg=RunnerConfig(n_nodes=N, rounds=rounds, eval_every=eval_every,
+                         compiled=compiled, net=net,
+                         mesh_devices=mesh_devices))
+
+
+def _async_runner(strategy, *, rounds=ROUNDS, profile=None):
+    tr, te, parts = _data()
+    return AsyncRunner(
+        init_fn=_mlp_params, loss_fn=_mlp_loss, eval_fn=_mlp_loss,
+        optimizer=sgd(0.05),
+        batcher=StackedBatcher(tr, parts, 8, seed=3),
+        test_batch={"images": te.images, "labels": te.labels},
+        strategy=strategy,
+        cfg=AsyncConfig(n_nodes=N, rounds=rounds, eval_every=1000,
+                        compute_time_s=1.0),
+        profile=profile if profile is not None else profiles.ideal())
+
+
+def _leaves(params):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+
+
+def _assert_bitwise(a, b):
+    assert len(a.edge_history) == len(b.edge_history)
+    for r, (ea, eb) in enumerate(zip(a.edge_history, b.edge_history)):
+        assert np.array_equal(ea, eb), f"edge sequence diverged at {r}"
+    for x, y in zip(_leaves(a.params), _leaves(b.params)):
+        np.testing.assert_array_equal(x, y)
+    assert a._comm_bytes == b._comm_bytes
+
+
+# ---------------------------------------------------------------------------
+# ideal conformance (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_dense_ideal_bitwise_matches_vanilla_compiled(name):
+    """Acceptance: dense netsim under profiles.ideal() is bit-identical
+    to the vanilla CompiledSuperstep (edges, params, comm, metrics)."""
+    a = _runner(STRATEGIES[name]())
+    a.run()
+    b = _runner(STRATEGIES[name](), net=DenseNetwork(profiles.ideal()))
+    b.run()
+    _assert_bitwise(a, b)
+    for ra, rb in zip(a.log.records, b.log.records):
+        assert ra.rnd == rb.rnd and ra.comm_bytes == rb.comm_bytes
+        assert ra.isolated == rb.isolated
+        assert ra.mean_accuracy == rb.mean_accuracy
+
+
+def test_dense_ideal_matches_async_runner():
+    """Acceptance: dense@ideal matches the event-driven runtime at zero
+    latency — exact edge sequence, params at the repo's established
+    cross-engine f32 tolerance."""
+    asyn = _async_runner(InGraphEpidemicStrategy(n=N, k=2, seed=0))
+    asyn.run()
+    dense = _runner(InGraphEpidemicStrategy(n=N, k=2, seed=0),
+                    net=DenseNetwork(profiles.ideal()))
+    dense.run()
+    assert len(asyn.edge_history) == len(dense.edge_history) == ROUNDS
+    for r, (ea, eb) in enumerate(zip(asyn.edge_history,
+                                     dense.edge_history)):
+        assert np.array_equal(ea, eb), f"edge sequence diverged at {r}"
+    for x, y in zip(_leaves(asyn.params), _leaves(dense.params)):
+        np.testing.assert_allclose(x, y, atol=1e-5)
+    assert dense.net_stats["dropped"] == 0   # the ideal network eats
+    assert dense.net_stats["staleness_hist"][0] \
+        == dense.net_stats["delivered"]      # ... and delays nothing
+
+
+def test_dense_chunk_invariance():
+    """Different eval cadences chunk the scan differently; keyed draws
+    make the trajectory bitwise identical regardless."""
+    prof = NetworkProfile(name="slow", base_latency_s=1.4, jitter_s=0.5,
+                          drop_rate=0.05, seed=7)
+    a = _runner(STRATEGIES["epidemic"](), net=DenseNetwork(prof),
+                rounds=12, eval_every=3)
+    a.run()
+    b = _runner(STRATEGIES["epidemic"](), net=DenseNetwork(prof),
+                rounds=12, eval_every=100)
+    b.run()
+    for x, y in zip(_leaves(a.params), _leaves(b.params)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_dense_sharded_one_device_matches_single():
+    """The sharded program (shard_map, gathered snapshot ring, embedded
+    staleness-expanded W) reproduces the single-device dense engine."""
+    prof = NetworkProfile(name="slow", base_latency_s=1.4, jitter_s=0.5,
+                          drop_rate=0.05, seed=7)
+    a = _runner(STRATEGIES["morph"](), net=DenseNetwork(prof))
+    a.run()
+    b = _runner(STRATEGIES["morph"](), net=DenseNetwork(prof),
+                mesh_devices=1)
+    b.run()
+    _assert_bitwise(a, b)
+
+
+# ---------------------------------------------------------------------------
+# lossy / stale fidelity
+# ---------------------------------------------------------------------------
+
+def _engine(strategy, net, rounds=ROUNDS):
+    runner = _runner(strategy, net=net, rounds=rounds)
+    engine = runner._make_engine()
+    engine.run()
+    return engine
+
+
+def test_dense_staleness_quantization():
+    """Delays quantize to floor(delay / round_s) snapshot indices; the
+    ring depth follows the profile's worst case."""
+    prof = NetworkProfile(name="slow", base_latency_s=2.3, seed=1)
+    net = DenseNetwork(prof, round_s=1.0)
+    engine = _engine(STRATEGIES["epidemic"](), net)
+    S = net.depth(engine._model_bytes)
+    assert S == 3                        # floor(2.3 / 1.0) = 2 rounds back
+    hist = engine.net_stats["staleness_hist"]
+    assert hist[2] > 0 and hist[0] == 0 and hist[1] == 0
+    # content staleness: 2 rounds back once the ring is warm; the first
+    # two rounds deliver the initial snapshot (sentinel staleness 1).
+    expect = (1 + 2 * (ROUNDS - 1)) / ROUNDS
+    assert engine.staleness_mean() == pytest.approx(expect)
+    # sub-round delays are absorbed by the receiver's wait: staleness 0
+    fast = DenseNetwork(profiles.wan(), round_s=1.0)
+    engine = _engine(STRATEGIES["epidemic"](), fast)
+    assert fast.depth(engine._model_bytes) == 1
+    assert engine.staleness_mean() == 0.0
+    assert engine.net_stats["dropped"] == 0
+
+
+def test_dense_drop_fraction_matches_event_driven():
+    """Satellite: the same lossy profile yields statistically matching
+    drop fractions through both network realizations."""
+    rate, rounds = 0.15, 15
+    prof = NetworkProfile(name="lossy", drop_rate=rate, seed=9)
+    engine = _engine(InGraphEpidemicStrategy(n=N, k=2, seed=0),
+                     DenseNetwork(prof), rounds=rounds)
+    total = engine.net_stats["delivered"] + engine.net_stats["dropped"]
+    dense_frac = engine.net_stats["dropped"] / total
+    asyn = _async_runner(InGraphEpidemicStrategy(n=N, k=2, seed=0),
+                         rounds=rounds, profile=prof)
+    asyn.run()
+    stats = asyn.transport.stats
+    async_frac = stats.dropped / stats.sent
+    sd = 3.0 * math.sqrt(rate * (1 - rate) / total)
+    assert abs(dense_frac - rate) < sd
+    assert abs(async_frac - rate) < sd
+    assert engine.delivered_history and \
+        not engine.delivered_history[0][np.eye(N, dtype=bool)].any()
+
+
+def test_dense_churn_freezes_nodes():
+    """A crashed node stops stepping and receiving; its row survives as
+    self-weight (frozen params), mirroring the event-driven defer path."""
+    fm = FaultModel(FaultConfig(churn_fraction=0.5, crash_fraction=1.0,
+                                horizon_s=4.0, seed=3), N)
+    net = DenseNetwork(profiles.ideal(), faults=fm)
+    engine = _engine(STRATEGIES["epidemic"](), net, rounds=10)
+    down = fm.ever_down()
+    assert down
+    # edges negotiated for down nodes are not delivered at the end
+    last_up = fm.round_up_masks(10, 1.0)[-1]
+    delivered = engine.delivered_history[-1]
+    for i in np.flatnonzero(~last_up):
+        assert not delivered[i].any() and not delivered[:, i].any()
+    assert engine.net_stats["dropped"] > 0
+
+
+# ---------------------------------------------------------------------------
+# dispatch guards
+# ---------------------------------------------------------------------------
+
+def test_net_requires_compiled_engine():
+    from repro.core import MorphConfig, MorphProtocol
+    runner = _runner(MorphProtocol(MorphConfig(n=N, k=2, seed=0)),
+                     net=DenseNetwork(profiles.ideal()), compiled=None)
+    with pytest.raises(TypeError):
+        runner.run()
+
+
+def test_net_rejects_psum_collective():
+    runner = _runner(STRATEGIES["morph"](),
+                     net=DenseNetwork(profiles.ideal()), mesh_devices=1)
+    runner.cfg.collective = "psum"
+    with pytest.raises(ValueError):
+        runner.run()

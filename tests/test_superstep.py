@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (InGraphEpidemicStrategy,
+from repro.core import (InGraphEpidemicLocalStrategy,
+                        InGraphEpidemicStrategy,
                         InGraphFullyConnectedStrategy, InGraphMorphStrategy,
                         InGraphStaticStrategy, MorphConfig, MorphProtocol)
 from repro.data import (dirichlet_partition, make_image_classification,
@@ -50,6 +51,7 @@ STRATEGIES = {
     "static": lambda: InGraphStaticStrategy(n=N, degree=3, seed=0),
     "fully-connected": lambda: InGraphFullyConnectedStrategy(n=N),
     "epidemic": lambda: InGraphEpidemicStrategy(n=N, k=2, seed=0),
+    "el-local": lambda: InGraphEpidemicLocalStrategy(n=N, k=2, seed=0),
 }
 
 
@@ -141,6 +143,30 @@ def test_compiled_run_writes_graph_state_back():
     # held edges are served to the host API without re-negotiating
     edges, w = strat.round_edges(ROUNDS)       # ROUNDS % delta_r != 0
     assert np.array_equal(edges, runner.edge_history[-1])
+
+
+def test_el_local_partial_view_respected_and_gossiped():
+    """EL-Local samples only from the carried view mask, and receiving a
+    model teaches the receiver its sender (views densify over rounds)."""
+    import jax.numpy as jnp
+    strat = InGraphEpidemicLocalStrategy(n=N, k=2, seed=0)
+    gstate = strat.init_graph_state()
+    view0 = np.asarray(gstate[1])
+    view_prev, seq = view0, []
+    for rnd in range(6):
+        gstate, edges, w = strat.graph_round(gstate, jnp.asarray(rnd),
+                                             None)
+        edges = np.asarray(edges)
+        seq.append(edges)
+        # a sender only reaches nodes in its own pre-round view
+        assert not (edges & ~view_prev.T).any()
+        view_prev = np.asarray(gstate[1])
+    assert view_prev.sum() > view0.sum()        # membership gossip happened
+    # the host adapter replays the identical edge sequence
+    replay = InGraphEpidemicLocalStrategy(n=N, k=2, seed=0)
+    for rnd in range(6):
+        host_edges, _ = replay.round_edges(rnd)
+        assert np.array_equal(seq[rnd], host_edges), rnd
 
 
 def test_eval_boundaries():
