@@ -10,11 +10,13 @@ scan body, zero host transfer per round).  Reported per device count:
 
 XLA fixes the device count at backend init, so each device count runs in
 a **child process** with ``XLA_FLAGS=--xla_force_host_platform_device_
-count=N``; the parent just aggregates.  On simulated host devices all
-"devices" share the same CPU cores, so this measures the *mechanics*
-(shard_map program, collective schedule, padding) rather than real
-scaling — on a TPU slice the same flag-free invocation shards over the
-actual chips.
+count=N``; the parent aggregates the children's CSV into
+``BENCH_fig10.json`` (children print raw lines and never write JSON
+themselves, so concurrent device counts cannot clobber one file).  On
+simulated host devices all "devices" share the same CPU cores, so this
+measures the *mechanics* (shard_map program, collective schedule,
+padding) rather than real scaling — on a TPU slice the same flag-free
+invocation shards over the actual chips.
 """
 from __future__ import annotations
 
@@ -26,6 +28,8 @@ import sys
 import time
 
 import numpy as np
+
+from . import harness
 
 
 def _mlp_params(*a, **kw):
@@ -95,8 +99,10 @@ def main(argv=None):
                args.k, args.collective)
         return None
 
-    print("fig10,engine,n,rounds_per_sec")
+    bench = harness.bench("fig10")
     rps = {}
+    knobs = {"chunk": args.chunk, "collective": args.collective,
+             "block_d": None, "use_pallas": False, "source": "explicit"}
     for d in args.devices:
         env = dict(os.environ)
         env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
@@ -109,18 +115,26 @@ def main(argv=None):
              "--k", str(args.k), "--collective", args.collective],
             capture_output=True, text=True, env=env,
             cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-        sys.stdout.write(proc.stdout)
         if proc.returncode != 0:
+            sys.stdout.write(proc.stdout)
             sys.stderr.write(proc.stderr)
             raise RuntimeError(f"fig10 child for {d} devices failed "
                                f"(exit {proc.returncode})")
         for line in proc.stdout.splitlines():
             if line.startswith("fig10,sharded"):
                 rps[d] = float(line.rsplit(",", 1)[1])
+                bench.record(
+                    f"sharded-d{d}/n{args.nodes}", f"{rps[d]:.1f}",
+                    rounds_per_sec=rps[d], knobs={**knobs, "devices": d})
+            elif line.startswith("fig10_per_round_ms,"):
+                _, key, ms = line.split(",")
+                bench.record(f"per_round_ms/{key}", ms,
+                             wall_clock_s=float(ms) / 1e3)
     base = args.devices[0]
     for d in args.devices[1:]:
-        print(f"fig10_derived,d{d}_over_d{base}_n{args.nodes},"
-              f"{rps[d] / rps[base]:.2f}", flush=True)
+        bench.record(f"derived/d{d}_over_d{base}_n{args.nodes}",
+                     f"{rps[d] / rps[base]:.2f}")
+    bench.finish()
     return rps
 
 

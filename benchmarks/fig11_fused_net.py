@@ -40,6 +40,7 @@ import time
 
 import numpy as np
 
+from . import harness
 from .common import ExpConfig, add_scale_args, make_ingraph_strategy
 
 PROFILES = ("ideal", "wan", "flaky-wan")
@@ -99,17 +100,22 @@ def run_fused(strategy_name: str, profile_name: str, cfg: ExpConfig):
     ``run_steps`` replays round indices, which is fine for timing but
     not for metrics), and a separate untimed clean ``run()`` of exactly
     ``cfg.rounds`` rounds whose ``net_stats``/accuracy are the fidelity
-    columns.  Returns ``(clean_runner, wall_seconds_per_cfg_rounds)``."""
+    columns.  Returns ``(clean_runner, wall_seconds_per_cfg_rounds,
+    hlo_cost_dict, shape_dict)`` — the last two are the harness's
+    deterministic columns for this cell's compiled program."""
     chunk = max(cfg.eval_every, 1)
     rounds = cfg.rounds - cfg.rounds % chunk
-    engine = _build_fused(strategy_name, profile_name, cfg)._make_engine()
+    runner = _build_fused(strategy_name, profile_name, cfg)
+    engine = runner._make_engine()
+    hlo = harness.engine_hlo(engine, chunk)
+    shape = harness.shape_dict(runner.cfg, runner.params)
     engine.run_steps(chunk, chunk)        # compile + warm caches
     t0 = time.perf_counter()
     engine.run_steps(rounds, chunk)
     dt = time.perf_counter() - t0
     clean = _build_fused(strategy_name, profile_name, cfg)
     clean.run()                           # untimed: the fidelity run
-    return clean, dt * cfg.rounds / max(rounds, 1)
+    return clean, dt * cfg.rounds / max(rounds, 1), hlo, shape
 
 
 def run_async(strategy_name: str, profile_name: str, cfg: ExpConfig):
@@ -140,6 +146,7 @@ def main(argv=None):
                     choices=list(STRATEGIES))
     args = ap.parse_args(argv)
 
+    bench = harness.bench("fig11")
     speedups = {}
     for n in args.nodes:
         for profile_name in args.profiles:
@@ -147,7 +154,8 @@ def main(argv=None):
                 cfg = ExpConfig(n_nodes=n, rounds=args.rounds,
                                 eval_every=max(args.rounds // 3, 1),
                                 seed=args.seed)
-                fused, t_f = run_fused(strategy_name, profile_name, cfg)
+                fused, t_f, hlo, shape = run_fused(strategy_name,
+                                                   profile_name, cfg)
                 asyn, t_a = run_async(strategy_name, profile_name, cfg)
                 stats = fused.net_stats
                 total = stats["delivered"] + stats["dropped"]
@@ -158,29 +166,40 @@ def main(argv=None):
                 a_sent = astats.sent_by_kind.get("model", 0)
                 a_drop = astats.dropped_by_kind.get("model", 0)
                 key = f"{profile_name}/{strategy_name}/n{n}"
-                rows = {
-                    "fused_rounds_per_sec": f"{args.rounds / t_f:.1f}",
-                    "async_rounds_per_sec": f"{args.rounds / t_a:.1f}",
-                    "fused_over_async": f"{t_a / t_f:.1f}",
-                    "fused_drop_frac":
-                        f"{stats['dropped'] / max(total, 1):.4f}",
-                    "async_drop_frac":
-                        f"{a_drop / max(a_sent, 1):.4f}",
-                    "fused_staleness_mean":
-                        f"{fused.staleness_mean():.3f}",
-                    "async_staleness_mean":
-                        f"{asyn.netlog.staleness_mean():.3f}",
+                fidelity = {
+                    "fused_drop_frac": stats["dropped"] / max(total, 1),
+                    "async_drop_frac": a_drop / max(a_sent, 1),
+                    "fused_staleness_mean": fused.staleness_mean(),
+                    "async_staleness_mean": asyn.netlog.staleness_mean(),
                     "fused_final_acc":
-                        f"{fused.log.records[-1].mean_accuracy:.4f}",
+                        fused.log.records[-1].mean_accuracy,
                     "async_final_acc":
-                        f"{asyn.log.records[-1].mean_accuracy:.4f}",
+                        asyn.log.records[-1].mean_accuracy,
                 }
-                for metric, value in rows.items():
-                    print(f"fig11,{key}/{metric},{value}", flush=True)
+                bench.record(f"{key}/fused_rounds_per_sec",
+                             f"{args.rounds / t_f:.1f}",
+                             rounds_per_sec=args.rounds / t_f,
+                             wall_clock_s=t_f, shape=shape, hlo=hlo,
+                             fidelity=fidelity)
+                bench.record(f"{key}/async_rounds_per_sec",
+                             f"{args.rounds / t_a:.1f}",
+                             rounds_per_sec=args.rounds / t_a,
+                             wall_clock_s=t_a)
+                bench.record(f"{key}/fused_over_async",
+                             f"{t_a / t_f:.1f}")
+                for metric, fmt in (("fused_drop_frac", ".4f"),
+                                    ("async_drop_frac", ".4f"),
+                                    ("fused_staleness_mean", ".3f"),
+                                    ("async_staleness_mean", ".3f"),
+                                    ("fused_final_acc", ".4f"),
+                                    ("async_final_acc", ".4f")):
+                    bench.record(f"{key}/{metric}",
+                                 format(fidelity[metric], fmt))
                 speedups[key] = t_a / t_f
     worst = min(speedups, key=speedups.get)
-    print(f"fig11_derived,min_fused_over_async,{speedups[worst]:.1f} "
-          f"({worst})", flush=True)
+    bench.record("derived/min_fused_over_async",
+                 f"{speedups[worst]:.1f} ({worst})")
+    bench.finish()
     return speedups
 
 

@@ -11,6 +11,8 @@ import argparse
 
 from repro.core import connectivity_probability
 
+from . import harness
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -19,7 +21,7 @@ def main(argv=None):
                     default=[100, 1000, 2000])
     args = ap.parse_args(argv)
 
-    print("fig2,n,d_s,d_r,p_connected")
+    bench = harness.bench("fig2")
     results = {}
     for n in args.sizes:
         trials = args.trials if n <= 100 else max(args.trials // 4, 10)
@@ -28,10 +30,12 @@ def main(argv=None):
                 p = connectivity_probability(n, d_s, d_r, trials=trials,
                                              seed=0)
                 results[(n, d_s, d_r)] = p
-                print(f"fig2,{n},{d_s},{d_r},{p:.3f}", flush=True)
+                bench.record(f"n{n}/ds{d_s}/dr{d_r}", f"{p:.3f}",
+                             trials=trials)
     # paper claim: two random edges suffice at every size
     worst_dr2 = min(v for (n, ds_, dr), v in results.items() if dr >= 2)
-    print(f"fig2_derived,min_p_connected_at_dr2,{worst_dr2:.3f}")
+    bench.record("derived/min_p_connected_at_dr2", f"{worst_dr2:.3f}")
+    bench.finish()
     return results
 
 

@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import argparse
 
+from . import harness
 from .common import ExpConfig, run_experiment
 
 STRATEGIES = ("fully-connected", "morph", "el-oracle", "static")
@@ -17,19 +18,22 @@ def main(argv=None):
     ap.add_argument("--nodes", type=int, default=16)
     args = ap.parse_args(argv)
 
-    print("fig3,strategy,round,accuracy,loss,internode_var")
+    bench = harness.bench("fig3")
     final_vars = {}
     for name in STRATEGIES:
         cfg = ExpConfig(n_nodes=args.nodes, rounds=args.rounds)
         log = run_experiment(name, cfg)
         for r in log.records:
-            print(f"fig3,{name},{r.rnd},{r.mean_accuracy:.4f},"
-                  f"{r.mean_loss:.4f},{r.internode_variance:.4f}",
-                  flush=True)
+            bench.record(
+                f"{name}/r{r.rnd}", f"{r.mean_accuracy:.4f}",
+                fidelity={"accuracy": r.mean_accuracy,
+                          "loss": r.mean_loss,
+                          "internode_var": r.internode_variance})
         final_vars[name] = log.records[-1].internode_variance
     if final_vars["morph"] > 0:
         ratio = final_vars["el-oracle"] / max(final_vars["morph"], 1e-6)
-        print(f"fig3_derived,el_var_over_morph_var,{ratio:.1f}")
+        bench.record("derived/el_var_over_morph_var", f"{ratio:.1f}")
+    bench.finish()
     return final_vars
 
 

@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import argparse
 
+from . import harness
 from .common import ExpConfig, run_experiment, summarize
 
 
@@ -16,19 +17,23 @@ def main(argv=None):
     ap.add_argument("--ks", type=int, nargs="+", default=[2, 3, 5])
     args = ap.parse_args(argv)
 
-    print("fig4,strategy,k,best_acc")
+    bench = harness.bench("fig4")
     gaps = {}
     for k in args.ks:
         accs = {}
         for name in ("fully-connected", "morph", "el-oracle"):
             cfg = ExpConfig(n_nodes=args.nodes, rounds=args.rounds, k=k)
             accs[name] = summarize(run_experiment(name, cfg))["best_acc"]
-            print(f"fig4,{name},{k},{accs[name]:.3f}", flush=True)
+            bench.record(f"{name}/k{k}", f"{accs[name]:.3f}")
         gaps[k] = {"morph": accs["fully-connected"] - accs["morph"],
                    "el": accs["fully-connected"] - accs["el-oracle"]}
     for k, g in gaps.items():
-        print(f"fig4_derived,gap_to_fc_at_k{k},morph={g['morph']*100:.1f}pp"
-              f",el={g['el']*100:.1f}pp")
+        bench.record(f"derived/gap_to_fc_at_k{k}",
+                     f"morph={g['morph']*100:.1f}pp"
+                     f" el={g['el']*100:.1f}pp",
+                     fidelity={"morph_gap_pp": g["morph"] * 100,
+                               "el_gap_pp": g["el"] * 100})
+    bench.finish()
     return gaps
 
 

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import argparse
 
+from . import harness
 from .common import ExpConfig, run_experiment, summarize
 
 
@@ -19,23 +20,26 @@ def main(argv=None):
     ap.add_argument("--deltas", type=int, nargs="+", default=[1, 5, 25])
     args = ap.parse_args(argv)
 
-    print("fig5,param,value,best_acc,final_var")
+    bench = harness.bench("fig5")
     out = {"beta": {}, "delta_r": {}}
     for beta in args.betas:
         cfg = ExpConfig(n_nodes=args.nodes, rounds=args.rounds, beta=beta)
         s = summarize(run_experiment("morph", cfg))
         out["beta"][beta] = s["best_acc"]
-        print(f"fig5,beta,{beta},{s['best_acc']:.3f},"
-              f"{s['internode_var']:.3f}", flush=True)
+        bench.record(f"beta/{beta}", f"{s['best_acc']:.3f}",
+                     fidelity={"best_acc": s["best_acc"],
+                               "final_var": s["internode_var"]})
     for dr in args.deltas:
         cfg = ExpConfig(n_nodes=args.nodes, rounds=args.rounds,
                         delta_r=dr)
         s = summarize(run_experiment("morph", cfg))
         out["delta_r"][dr] = s["best_acc"]
-        print(f"fig5,delta_r,{dr},{s['best_acc']:.3f},"
-              f"{s['internode_var']:.3f}", flush=True)
+        bench.record(f"delta_r/{dr}", f"{s['best_acc']:.3f}",
+                     fidelity={"best_acc": s["best_acc"],
+                               "final_var": s["internode_var"]})
     spread = max(out["delta_r"].values()) - min(out["delta_r"].values())
-    print(f"fig5_derived,delta_r_acc_spread_pp,{spread * 100:.2f}")
+    bench.record("derived/delta_r_acc_spread_pp", f"{spread * 100:.2f}")
+    bench.finish()
     return out
 
 

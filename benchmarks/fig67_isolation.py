@@ -25,6 +25,8 @@ import numpy as np
 from repro.core import (EpidemicStrategy, MorphConfig, MorphProtocol,
                         StaticStrategy, in_degrees, isolated_nodes)
 
+from . import harness
+
 
 def run_metrics(strategy, rounds: int, n: int, k: int, params):
     """Per-round mean isolated count and mean in-degree deficit vs k."""
@@ -47,7 +49,7 @@ def main(argv=None):
     rng = np.random.default_rng(0)
     params = {"w": rng.normal(size=(n, 64)).astype(np.float32)}
 
-    print("fig67,strategy,k,mean_isolated")
+    bench = harness.bench("fig67")
     out = {}
     for k in args.ks:
         el, _ = run_metrics(EpidemicStrategy(n=n, k=k, seed=0),
@@ -65,14 +67,14 @@ def main(argv=None):
                   "morph_deficit": morph_def,
                   "morph_slack": slack, "morph_slack_deficit": slack_def}
         for name in ("el", "morph", "static"):
-            print(f"fig67,{name},{k},{out[k][name]:.2f}", flush=True)
-        print(f"fig67,morph-kout{k + 1},{k},{slack:.2f}", flush=True)
-        print(f"fig67_deficit,morph,{k},{morph_def:.3f}", flush=True)
-        print(f"fig67_deficit,morph-kout{k + 1},{k},{slack_def:.3f}",
-              flush=True)
-    print(f"fig67_derived,el_isolated_at_k3,{out[args.ks[0]]['el']:.2f}")
-    print(f"fig67_derived,morph_max_isolated,"
-          f"{max(v['morph'] for v in out.values()):.2f}")
+            bench.record(f"{name}/k{k}", f"{out[k][name]:.2f}")
+        bench.record(f"morph-kout{k + 1}/k{k}", f"{slack:.2f}")
+        bench.record(f"deficit/morph/k{k}", f"{morph_def:.3f}")
+        bench.record(f"deficit/morph-kout{k + 1}/k{k}", f"{slack_def:.3f}")
+    bench.record("derived/el_isolated_at_k3",
+                 f"{out[args.ks[0]]['el']:.2f}")
+    bench.record("derived/morph_max_isolated",
+                 f"{max(v['morph'] for v in out.values()):.2f}")
     # Does one slot of sender capacity slack ever help convergence toward
     # the full-k topology?  (ROADMAP tight-market item: under the fixed
     # n*k_out sweep bound it should not — tight markets already fill.)
@@ -81,16 +83,17 @@ def main(argv=None):
     # run to beat Monte-Carlo noise, not just a strict inequality.
     NOISE = 0.05
     for k, v in out.items():
-        print(f"fig67_derived,slack_delta_isolated_k{k},"
-              f"{v['morph_slack'] - v['morph']:+.3f}")
-        print(f"fig67_derived,slack_delta_deficit_k{k},"
-              f"{v['morph_slack_deficit'] - v['morph_deficit']:+.3f}")
+        bench.record(f"derived/slack_delta_isolated_k{k}",
+                     f"{v['morph_slack'] - v['morph']:+.3f}")
+        bench.record(f"derived/slack_delta_deficit_k{k}",
+                     f"{v['morph_slack_deficit'] - v['morph_deficit']:+.3f}")
     helps_iso = any(v["morph_slack"] < v["morph"] - NOISE
                     for v in out.values())
     helps_def = any(v["morph_slack_deficit"] < v["morph_deficit"] - NOISE
                     for v in out.values())
-    print(f"fig67_derived,slack_helps_isolation,{int(helps_iso)}")
-    print(f"fig67_derived,slack_helps_indegree_fill,{int(helps_def)}")
+    bench.record("derived/slack_helps_isolation", int(helps_iso))
+    bench.record("derived/slack_helps_indegree_fill", int(helps_def))
+    bench.finish()
     return out
 
 

@@ -23,6 +23,7 @@ from repro.netsim import AsyncConfig, AsyncRunner, FaultModel, profiles
 from repro.netsim.faults import FaultConfig
 from repro.optim import sgd
 
+from . import harness
 from .common import ExpConfig, add_scale_args, make_strategy
 
 PROFILES = ("lan", "wan", "flaky-wan")
@@ -79,6 +80,7 @@ def main(argv=None):
                     help="accuracy for the time-to-accuracy metric")
     args = ap.parse_args(argv)
 
+    bench = harness.bench("fig8")
     results = {}
     for profile_name in PROFILES:
         for strategy_name in STRATEGIES:
@@ -104,8 +106,9 @@ def main(argv=None):
                 "dead_at_end": last.dead,
             }
             for metric, value in rows.items():
-                print(f"fig8,{key}/{metric},{value}", flush=True)
+                bench.record(f"{key}/{metric}", value)
             results[key] = last.mean_accuracy
+    bench.finish()
     return results
 
 

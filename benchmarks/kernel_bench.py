@@ -12,6 +12,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 
+from . import harness
+
 
 def _time(fn, *args, warmup=2, iters=5) -> float:
     for _ in range(warmup):
@@ -29,19 +31,23 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=16)
     args = ap.parse_args(argv)
 
-    print("kernel_bench,kernel,n,d,us_per_call,oracle_us")
+    bench = harness.bench("kernels")
     for d in args.sizes:
         x = jax.random.normal(jax.random.PRNGKey(0), (args.n, d))
         w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1),
                                              (args.n, args.n)))
+        knobs = {"block_d": ops.pick_block_d(d), "interpret": True}
         t_cos = _time(lambda a: ops.pairwise_cosine(a, interpret=True), x)
         t_cos_ref = _time(jax.jit(ref.pairwise_cosine_ref), x)
-        print(f"kernel_bench,pairwise_cosine,{args.n},{d},"
-              f"{t_cos:.0f},{t_cos_ref:.0f}", flush=True)
+        bench.record(f"pairwise_cosine/n{args.n}/d{d}",
+                     f"{t_cos:.0f}", wall_clock_s=t_cos / 1e6,
+                     knobs=knobs, oracle_us=round(t_cos_ref))
         t_mix = _time(lambda a, b: ops.mix(a, b, interpret=True), w, x)
         t_mix_ref = _time(jax.jit(ref.graph_mix_ref), w, x)
-        print(f"kernel_bench,graph_mix,{args.n},{d},"
-              f"{t_mix:.0f},{t_mix_ref:.0f}", flush=True)
+        bench.record(f"graph_mix/n{args.n}/d{d}",
+                     f"{t_mix:.0f}", wall_clock_s=t_mix / 1e6,
+                     knobs=knobs, oracle_us=round(t_mix_ref))
+    bench.finish()
 
 
 if __name__ == "__main__":

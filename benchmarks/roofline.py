@@ -17,6 +17,8 @@ import json
 import os
 from typing import Dict, List
 
+from . import harness
+
 
 def load_records(paths: List[str]) -> List[Dict]:
     records = []
@@ -64,25 +66,40 @@ def main(argv=None):
     records.sort(key=lambda r: (r.get("arch", ""), r.get("shape", ""),
                                 bool(r.get("multi_pod"))))
     if not records:
-        print("roofline,no_records_found,0")
+        if args.csv:
+            bench = harness.bench("roofline")
+            bench.record("no_records_found", 0)
+            bench.finish()
+        else:
+            print("roofline,no_records_found,0")
         return []
     if args.csv:
+        bench = harness.bench("roofline")
         ok = sum(1 for r in records if "roofline" in r)
         skip = sum(1 for r in records if "skipped" in r)
         err = sum(1 for r in records if "error" in r)
-        print(f"roofline,pairs_ok,{ok}")
-        print(f"roofline,pairs_skipped,{skip}")
-        print(f"roofline,pairs_error,{err}")
+        bench.record("pairs_ok", ok)
+        bench.record("pairs_skipped", skip)
+        bench.record("pairs_error", err)
         for r in records:
             if "roofline" in r:
                 rf = r["roofline"]
                 mesh = "multi" if r.get("multi_pod") else "single"
-                print(f"roofline,{r['arch']}|{r['shape']}|{mesh},"
-                      f"dom={rf['dominant']},"
-                      f"c={rf['compute_s']*1e3:.1f}ms,"
-                      f"m={rf['memory_s']*1e3:.1f}ms,"
-                      f"x={rf['collective_s']*1e3:.1f}ms,"
-                      f"useful={rf['useful_flop_ratio']:.2f}")
+                bench.record(
+                    f"{r['arch']}|{r['shape']}|{mesh}",
+                    f"dom={rf['dominant']} "
+                    f"c={rf['compute_s']*1e3:.1f}ms "
+                    f"m={rf['memory_s']*1e3:.1f}ms "
+                    f"x={rf['collective_s']*1e3:.1f}ms "
+                    f"useful={rf['useful_flop_ratio']:.2f}",
+                    hlo={"flops": rf["hlo_flops_per_chip"],
+                         "bytes": rf["hlo_bytes_per_chip"],
+                         "collective_bytes":
+                             rf["collective_bytes_per_chip"]},
+                    fidelity={"dominant": rf["dominant"],
+                              "useful_flop_ratio":
+                                  rf["useful_flop_ratio"]})
+        bench.finish()
     else:
         print("| arch | shape | mesh | compute ms | memory ms | "
               "collective ms | dominant | useful FLOP ratio | compile s |")

@@ -1,5 +1,7 @@
 """Benchmark aggregator: one section per paper table/figure plus the
-roofline + kernel microbenches.  Prints ``name,key,value`` CSV lines.
+roofline + kernel microbenches.  Prints ``name,key,value`` CSV lines
+and writes each section's machine-readable ``BENCH_<name>.json``
+(schema: benchmarks/harness.py) into ``--bench-dir``.
 
   PYTHONPATH=src python -m benchmarks.run            # default sizes
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale-ish
@@ -8,6 +10,11 @@ roofline + kernel microbenches.  Prints ``name,key,value`` CSV lines.
 ``--smoke`` shrinks every section to minutes-scale totals — numbers are
 meaningless, but every figure script executes end to end, which is what
 the CI benchmarks-smoke job runs so fig scripts can't silently rot.
+The CI perf job runs selected sections at smoke shapes and gates their
+``BENCH_*.json`` HLO-cost columns with tools/check_bench.py.
+
+``--junitxml PATH`` additionally writes one JUnit testcase per section
+(pass/fail + duration) for CI artifact upload.
 
 The roofline section reads dryrun_results.json (+ rerun*.json); run
 ``python -m repro.launch.dryrun --all --mesh both --out
@@ -16,9 +23,29 @@ dryrun_results.json`` first if missing.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
+
+
+def write_junit(path: str, results) -> None:
+    """Minimal JUnit XML: ``results`` is [(section, seconds, error|None)]."""
+    from xml.etree import ElementTree as ET
+    suite = ET.Element(
+        "testsuite", name="benchmarks",
+        tests=str(len(results)),
+        failures=str(sum(1 for _, _, e in results if e)),
+        time=f"{sum(t for _, t, _ in results):.1f}")
+    for name, seconds, err in results:
+        case = ET.SubElement(suite, "testcase", classname="benchmarks",
+                             name=name, time=f"{seconds:.1f}")
+        if err:
+            failure = ET.SubElement(case, "failure", message="section "
+                                    "raised")
+            failure.text = err
+    ET.ElementTree(suite).write(path, encoding="unicode",
+                                xml_declaration=True)
 
 
 def main(argv=None):
@@ -30,11 +57,19 @@ def main(argv=None):
                          "end in minutes (the CI benchmarks-smoke job)")
     ap.add_argument("--only", default=None,
                     help="run a single section by name")
+    ap.add_argument("--bench-dir", default=None,
+                    help="directory for BENCH_<name>.json records "
+                         "(default: $BENCH_DIR, else the working "
+                         "directory)")
+    ap.add_argument("--junitxml", default=None,
+                    help="write per-section JUnit XML here")
     args = ap.parse_args(argv)
     if args.full and args.smoke:
         print("--full and --smoke are mutually exclusive",
               file=sys.stderr)
         return 2
+    if args.bench_dir is not None:
+        os.environ["BENCH_DIR"] = args.bench_dir
 
     def size(full, default, smoke):
         return full if args.full else smoke if args.smoke else default
@@ -105,6 +140,7 @@ def main(argv=None):
         return 2
 
     failures = 0
+    results = []
     for name, fn in sections:
         if args.only and name != args.only:
             continue
@@ -112,12 +148,17 @@ def main(argv=None):
         print(f"### section {name}", flush=True)
         try:
             fn()
-            print(f"section_time,{name},{time.time() - t0:.1f}s",
-                  flush=True)
+            dt = time.time() - t0
+            print(f"section_time,{name},{dt:.1f}s", flush=True)
+            results.append((name, dt, None))
         except Exception:
             failures += 1
             print(f"section_FAILED,{name}", flush=True)
             traceback.print_exc()
+            results.append((name, time.time() - t0,
+                            traceback.format_exc()))
+    if args.junitxml:
+        write_junit(args.junitxml, results)
     if failures:
         print(f"benchmark_failures,{failures}", file=sys.stderr)
     return min(failures, 125)    # nonzero exit status on any failed section

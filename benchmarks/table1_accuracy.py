@@ -9,6 +9,7 @@ from __future__ import annotations
 import argparse
 import json
 
+from . import harness
 from .common import ExpConfig, run_experiment, summarize
 
 STRATEGIES = ("fully-connected", "morph", "el-oracle", "static")
@@ -38,16 +39,21 @@ def main(argv=None):
                       "var": sum(variances) / len(variances),
                       "comm_gb": sum(comm) / len(comm) / 1e9}
 
+    bench = harness.bench("table1")
     print(f"\ntable1,{'strategy':>16}, acc,   var,   comm_GB")
     for name, r in rows.items():
         print(f"table1,{name:>16},{r['acc']:.3f},{r['var']:6.2f},"
               f"{r['comm_gb']:8.3f}")
+        bench.record(f"{name}/acc", f"{r['acc']:.3f}", print_csv=False,
+                     fidelity={"acc": r["acc"], "var": r["var"],
+                               "comm_gb": r["comm_gb"]})
     morph, el = rows["morph"]["acc"], rows["el-oracle"]["acc"]
     fc, static = rows["fully-connected"]["acc"], rows["static"]["acc"]
-    print(f"table1_derived,morph_over_el,{morph / max(el, 1e-9):.3f}")
-    print(f"table1_derived,morph_gap_to_fc_pp,{(fc - morph) * 100:.2f}")
-    print(f"table1_derived,morph_over_static,"
-          f"{morph / max(static, 1e-9):.3f}")
+    bench.record("derived/morph_over_el", f"{morph / max(el, 1e-9):.3f}")
+    bench.record("derived/morph_gap_to_fc_pp", f"{(fc - morph) * 100:.2f}")
+    bench.record("derived/morph_over_static",
+                 f"{morph / max(static, 1e-9):.3f}")
+    bench.finish()
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=1)

@@ -6,7 +6,12 @@ with drops, stragglers and churn — and prints the wall-clock-domain
 story: time-to-accuracy, staleness, messages lost.
 
     PYTHONPATH=src python examples/async_morph.py
+
+Scale via the environment for smoke runs (tools/run_examples.py):
+EXAMPLE_NODES / EXAMPLE_ROUNDS.
 """
+import os
+
 import numpy as np
 
 from repro.core import MorphConfig, MorphProtocol
@@ -17,7 +22,9 @@ from repro.netsim import (AsyncConfig, AsyncRunner, FaultConfig, FaultModel,
                           profiles)
 from repro.optim import sgd
 
-N, ROUNDS, K = 8, 20, 2
+N = int(os.environ.get("EXAMPLE_NODES", "8"))
+ROUNDS = int(os.environ.get("EXAMPLE_ROUNDS", "20"))
+K = 2
 
 
 def build_runner(profile, faults):

@@ -5,7 +5,11 @@ same seed: the per-round host loop and the fused ``lax.scan`` engine.
 Prints both trajectories (identical) and their round throughput.
 
   PYTHONPATH=src python examples/compiled_superstep.py
+
+Scale via the environment for smoke runs (tools/run_examples.py):
+EXAMPLE_NODES / EXAMPLE_ROUNDS.
 """
+import os
 import time
 
 import numpy as np
@@ -17,7 +21,9 @@ from repro.dlrt import DecentralizedRunner, RunnerConfig
 from repro.models.cnn import cnn_loss, cnn_params
 from repro.optim import sgd
 
-N, ROUNDS, K = 16, 40, 3
+N = int(os.environ.get("EXAMPLE_NODES", "16"))
+ROUNDS = int(os.environ.get("EXAMPLE_ROUNDS", "40"))
+K = 3
 
 rng = np.random.default_rng(0)
 ds = make_image_classification(1500, num_classes=4, image_size=8, seed=0)

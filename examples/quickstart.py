@@ -6,7 +6,12 @@ similarity, Eq.-5 diversity selection, college-admission matching,
 uniform mixing — runs as ONE jitted superstep.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Scale via the environment for smoke runs (tools/run_examples.py):
+EXAMPLE_NODES / EXAMPLE_ROUNDS.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,7 +22,9 @@ from repro.data.pipeline import TokenBatcher
 from repro.dlrt import MorphHParams, init_train_state, make_train_step
 from repro.optim import sgd
 
-N_NODES, BATCH, SEQ, ROUNDS, DELTA_R = 8, 8, 64, 60, 5
+N_NODES = int(os.environ.get("EXAMPLE_NODES", "8"))
+ROUNDS = int(os.environ.get("EXAMPLE_ROUNDS", "60"))
+BATCH, SEQ, DELTA_R = 8, 64, 5
 
 cfg = get_config("llama3.2-3b").reduced()      # same family, smoke scale
 opt = sgd(0.1)

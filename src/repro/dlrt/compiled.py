@@ -153,7 +153,12 @@ class CompiledSuperstep:
       the conformance tests pit against the host loop bit-for-bit;
     * ``net`` — optional :class:`repro.netsim.DenseNetwork`: price
       latency/staleness/drops/churn inside the scan (module docstring;
-      requires ``collective="gather"`` when sharded).
+      requires ``collective="gather"`` when sharded);
+    * ``chunk`` — cap on rounds fused per compiled dispatch (None =
+      one superstep per eval chunk).  Trajectory-invariant; this and
+      ``block_d``/``collective`` must arrive concrete — ``"auto"``
+      sentinels are resolved upstream by ``repro.tune`` (DESIGN.md
+      §10).
 
     Invariants: ``params`` / ``opt_state`` expose the logical ``[n,
     ...]`` view even in sharded mode (padding is internal); the decoded
@@ -171,7 +176,12 @@ class CompiledSuperstep:
                  params=None, opt_state=None,
                  mesh=None, collective: str = "gather",
                  data_stream: Optional[DeviceDataStream] = None,
-                 net=None):
+                 net=None, chunk: Optional[int] = None):
+        if isinstance(block_d, str) or isinstance(chunk, str):
+            raise TypeError(
+                "the engine takes concrete knobs; \"auto\" sentinels are "
+                "resolved by DecentralizedRunner via repro.tune."
+                "resolve_knobs before the engine is built")
         if not getattr(strategy, "in_graph", False):
             raise TypeError(
                 f"strategy {getattr(strategy, 'name', strategy)!r} has no "
@@ -194,6 +204,11 @@ class CompiledSuperstep:
         self.strategy = strategy
         self.batcher = batcher
         self.stream = data_stream
+        # superstep-length cap (rounds per scan): eval chunks longer than
+        # this are subdivided — evaluation cadence is unchanged, only how
+        # many rounds each compiled dispatch fuses.  None = one superstep
+        # per eval chunk (the pre-tuner behaviour).
+        self.chunk = chunk
         self.test_batch = {k: jnp.asarray(v) for k, v in test_batch.items()}
         if params is None:
             keys = jax.random.split(jax.random.PRNGKey(cfg.seed),
@@ -647,6 +662,46 @@ class CompiledSuperstep:
             check_rep=False))
         return self._superstep
 
+    def _prefetch_batches(self, k: int):
+        """Draw ``k`` rounds' worth of host batches and stack them into
+        the ``[K, n_pad, b, ...]`` pytree the superstep consumes
+        (advances the host batcher by ``k`` draws)."""
+        host_batches = [self.batcher.next() for _ in range(k)]
+        batches = {key: jnp.asarray(
+            np.stack([b[key] for b in host_batches]))
+            for key in host_batches[0]}
+        if self.n_pad != self.cfg.n_nodes:
+            batches = {key: jnp.pad(
+                v, [(0, 0), (0, self.n_pad - self.cfg.n_nodes)]
+                + [(0, 0)] * (v.ndim - 2), mode="edge")
+                for key, v in batches.items()}
+        return batches
+
+    def compiled_hlo(self, chunk: Optional[int] = None,
+                     start: int = 0) -> str:
+        """Compile — without executing — one ``chunk``-round superstep
+        and return its post-optimization HLO text.
+
+        This is the autotuner's stage-1 surface: candidates are lowered
+        and costed with :func:`repro.launch.hlo_cost.analyse_hlo` (the
+        trip-count-aware model, so the scan body is weighted by
+        ``chunk``) before a single round is ever run.  In host-batcher
+        mode this draws ``chunk`` batches to obtain the input pytree
+        (the batcher advances; use a fresh engine if that matters).
+        """
+        k = chunk or self.chunk or self.cfg.eval_every
+        rnds = jnp.arange(start, start + k)
+        carry = (self._params, self._opt_state, self.gstate, self.sim,
+                 self._netstate)
+        if self.stream is None:
+            batches = self._prefetch_batches(k)
+            lowered = self._get_superstep(batches).lower(
+                carry, rnds, batches)
+        else:
+            lowered = self._get_superstep(None).lower(
+                carry, rnds, *self._stream_args)
+        return lowered.compile().as_text()
+
     def _run_chunk(self, start: int, end: int) -> np.ndarray:
         """Execute rounds ``[start, end]`` as one on-device superstep and
         decode the stacked per-round edge matrices (``[K, n, n]`` bool,
@@ -656,15 +711,7 @@ class CompiledSuperstep:
         carry = (self._params, self._opt_state, self.gstate, self.sim,
                  self._netstate)
         if self.stream is None:
-            host_batches = [self.batcher.next() for _ in range(k)]
-            batches = {key: jnp.asarray(
-                np.stack([b[key] for b in host_batches]))
-                for key in host_batches[0]}
-            if self.n_pad != self.cfg.n_nodes:
-                batches = {key: jnp.pad(
-                    v, [(0, 0), (0, self.n_pad - self.cfg.n_nodes)]
-                    + [(0, 0)] * (v.ndim - 2), mode="edge")
-                    for key, v in batches.items()}
+            batches = self._prefetch_batches(k)
             fn = self._get_superstep(batches)
             carry, ys = fn(carry, rnds, batches)
         else:
@@ -717,18 +764,32 @@ class CompiledSuperstep:
             ) -> MetricsLog:
         """Run all ``cfg.rounds`` rounds in eval-boundary-aligned
         supersteps; returns the same :class:`MetricsLog` the host runner
-        would produce for this trajectory."""
+        would produce for this trajectory.  A ``chunk`` cap subdivides
+        long eval chunks into fixed-size supersteps (same trajectory and
+        log bit for bit — the scan body is identical, only the number of
+        rounds per dispatch changes)."""
         for start, end in eval_boundaries(self.cfg.rounds,
                                           self.cfg.eval_every):
-            edges_np = self._run_chunk(start, end)
+            s = start
+            while True:
+                e = end if not self.chunk \
+                    else min(s + self.chunk - 1, end)
+                edges_np = self._run_chunk(s, e)
+                if e == end:
+                    break
+                s = e + 1
             rec = self.evaluate(end, edges_np[-1])
             if progress is not None:
                 progress(rec)
         return self.log
 
-    def run_steps(self, rounds: int, chunk: int) -> None:
+    def run_steps(self, rounds: int, chunk: Optional[int] = None) -> None:
         """Throughput mode: run ``rounds`` rounds in fixed-size supersteps
-        with no evaluation — the fig9/fig10 benchmark loop."""
+        with no evaluation — the fig9/fig10 benchmark loop and the
+        autotuner's stage-2 micro-run.  ``chunk`` defaults to the
+        engine's resolved chunk knob (all rounds in one superstep when
+        neither is set)."""
+        chunk = chunk or self.chunk or rounds
         start = 0
         while start < rounds:
             end = min(start + chunk, rounds) - 1

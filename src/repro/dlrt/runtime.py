@@ -50,7 +50,16 @@ class RunnerConfig:
     compiled: Optional[bool] = None
     use_pallas: bool = False               # Pallas sim + fused mixing
     interpret: bool = False                # Pallas interpret mode (CPU)
-    block_d: Optional[int] = None          # kernel D-block override
+    # Performance knobs of the compiled engine.  Each accepts the
+    # literal string "auto": the runner then resolves it through the
+    # repro.tune cache for this run's (backend, n, D, devices, net)
+    # shape — falling back to the hand-set default below when no cache
+    # entry exists — before the engine is built, so an "auto" run is
+    # bit-identical to passing the resolved values explicitly.
+    block_d: Optional[object] = None       # kernel D-block (int | "auto")
+    # Superstep length cap in rounds per compiled dispatch (int |
+    # "auto"); None fuses each whole eval chunk.  Trajectory-invariant.
+    chunk: Optional[object] = None
     # Sharded superstep (compiled engine only): shard the node axis over
     # this many devices via shard_map.  None = single-device engine;
     # 0 = every local device; N > 0 = exactly N devices (error if the
@@ -58,8 +67,8 @@ class RunnerConfig:
     # device_count=N on CPU).
     mesh_devices: Optional[int] = None
     # Sharded mixing schedule: "gather" (row-block of W applied to the
-    # all-gathered population; bitwise-matches the single-device engine)
-    # or "psum" (partial-products reduce; f32-rounding-close).
+    # all-gathered population; bitwise-matches the single-device engine),
+    # "psum" (partial-products reduce; f32-rounding-close), or "auto".
     collective: str = "gather"
     # Dense in-scan network model (repro.netsim.DenseNetwork): price
     # latency/staleness/drops/churn inside the fused superstep
@@ -144,6 +153,8 @@ class DecentralizedRunner:
         self.delivered_history: list = []  # per-round delivered edges
                                            # (cfg.net runs only)
         self.net_stats = None              # dense-network counters ditto
+        self.resolved_knobs = None         # set when the compiled engine
+                                           # is built (repro.tune)
         self._comm_bytes = 0
         self._model_bytes = cfg.model_bytes \
             or stacked_model_bytes(self.params, cfg.n_nodes)
@@ -195,9 +206,17 @@ class DecentralizedRunner:
         cross-node ops run as collectives (DESIGN.md §8).  A
         :class:`repro.data.DeviceDataStream` passed as ``batcher`` is
         detected here and routed to the engine's in-scan batch drawing.
+
+        ``"auto"`` knobs (``cfg.block_d`` / ``cfg.collective`` /
+        ``cfg.chunk``) are resolved here against the ``repro.tune``
+        cache; the concrete values land in ``self.resolved_knobs``
+        (DESIGN.md §10).
         """
         from ..launch.mesh import make_superstep_mesh
+        from ..tune import resolve_knobs
         from .compiled import CompiledSuperstep
+        knobs = resolve_knobs(self.cfg, self.params)
+        self.resolved_knobs = knobs
         mesh = None
         if self.cfg.mesh_devices is not None:
             mesh = make_superstep_mesh(self.cfg.mesh_devices or None)
@@ -209,8 +228,9 @@ class DecentralizedRunner:
             data_stream=stream,
             test_batch=self.test_batch, strategy=self.strategy,
             cfg=self.cfg, use_pallas=self.cfg.use_pallas,
-            interpret=self.cfg.interpret, block_d=self.cfg.block_d,
-            mesh=mesh, collective=self.cfg.collective, net=self.cfg.net,
+            interpret=self.cfg.interpret, block_d=knobs.block_d,
+            mesh=mesh, collective=knobs.collective, net=self.cfg.net,
+            chunk=knobs.chunk,
             params=self.params, opt_state=self.opt_state)
 
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None

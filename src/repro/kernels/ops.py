@@ -52,10 +52,18 @@ def _pad_n(x: jax.Array, mult: int, axes=(0,)) -> jax.Array:
     return jnp.pad(x, width)
 
 
-def _pick_block(d: int, block_d: Optional[int]) -> int:
+def pick_block_d(d: int, block_d: Optional[int] = None) -> int:
+    """Effective D-block size for feature dimension ``d``: the explicit
+    override when given, else the library default clamped into
+    ``[128, DEFAULT_BLOCK_D]``.  Public so the autotuner
+    (``repro.tune``) can enumerate candidates around — and record — the
+    value a ``block_d=None`` knob actually resolves to."""
     if block_d is not None:
         return block_d
     return min(DEFAULT_BLOCK_D, max(128, d))
+
+
+_pick_block = pick_block_d          # internal alias (call sites below)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))

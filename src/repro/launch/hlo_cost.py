@@ -98,6 +98,11 @@ class Cost:
     collective_bytes: float = 0.0
     collective_per_kind: Dict[str, float] = field(default_factory=dict)
     collective_counts: Dict[str, float] = field(default_factory=dict)
+    # trip-weighted executed-op tally per opcode (free/bookkeeping ops
+    # excluded) — the op-count metric the perf CI gate tracks: a new
+    # gather inside the scan body shows up here multiplied by the trip
+    # count even when its byte cost is small.
+    op_counts: Dict[str, float] = field(default_factory=dict)
     unknown_trip_whiles: int = 0
 
     def add(self, other: "Cost", mult: float = 1.0) -> None:
@@ -110,6 +115,8 @@ class Cost:
         for k, v in other.collective_counts.items():
             self.collective_counts[k] = (
                 self.collective_counts.get(k, 0.0) + mult * v)
+        for k, v in other.op_counts.items():
+            self.op_counts[k] = self.op_counts.get(k, 0.0) + mult * v
         self.unknown_trip_whiles += other.unknown_trip_whiles
 
 
@@ -245,6 +252,7 @@ class HloCostModel:
         opcode = op.opcode
         if opcode in _FREE or opcode in _SKIP:
             return c
+        c.op_counts[opcode] = 1.0
         res_elems, res_bytes = _type_elems_bytes(op.type_text)
 
         # control flow / nested computations
@@ -269,6 +277,8 @@ class HloCostModel:
                 for k, v in inner.collective_counts.items():
                     c.collective_counts[k] = \
                         c.collective_counts.get(k, 0.0) + v
+                for k, v in inner.op_counts.items():
+                    c.op_counts[k] = c.op_counts.get(k, 0.0) + v
                 c.unknown_trip_whiles += inner.unknown_trip_whiles
                 c.bytes += self._fusion_boundary_bytes(op, m.group(1),
                                                        res_bytes)
@@ -419,5 +429,7 @@ def analyse_hlo(hlo_text: str) -> Dict[str, float]:
         "collective_bytes": cost.collective_bytes,
         "collective_per_kind": dict(cost.collective_per_kind),
         "collective_counts": dict(cost.collective_counts),
+        "op_counts": dict(cost.op_counts),
+        "op_count_total": float(sum(cost.op_counts.values())),
         "unknown_trip_whiles": cost.unknown_trip_whiles,
     }

@@ -1,0 +1,26 @@
+"""Autotuning for the compiled superstep's performance knobs.
+
+``repro.tune`` resolves ``RunnerConfig``'s ``"auto"`` sentinels
+(``block_d`` / ``collective`` / ``chunk``) from a versioned on-disk
+cache keyed by ``(backend, n, D, devices, net)``, and provides the
+two-stage tuner that fills that cache: HLO-cost pruning over lowered
+candidates, then empirical timing of the survivors.  See DESIGN.md §10
+and ``python -m repro.tune --help``.
+"""
+from .cache import (CACHE_VERSION, DEFAULT_CACHE_PATH, ENV_CACHE,
+                    TuneEntry, TuneShape, TuningCache,
+                    load_default_cache)
+from .resolve import AUTO, ResolvedKnobs, resolve_knobs, shape_of
+from .space import (DEFAULT_BLOCK_DS, DEFAULT_CHUNKS, Candidate,
+                    candidate_space)
+from .tuner import (PEAKS, TuneResult, prune, stage1_score, time_engine,
+                    tune, tune_into)
+from .workload import mlp_runner_factory
+
+__all__ = ["CACHE_VERSION", "DEFAULT_CACHE_PATH", "ENV_CACHE",
+           "TuneEntry", "TuneShape", "TuningCache", "load_default_cache",
+           "AUTO", "ResolvedKnobs", "resolve_knobs", "shape_of",
+           "DEFAULT_BLOCK_DS", "DEFAULT_CHUNKS", "Candidate",
+           "candidate_space",
+           "PEAKS", "TuneResult", "prune", "stage1_score", "time_engine",
+           "tune", "tune_into", "mlp_runner_factory"]

@@ -1,0 +1,72 @@
+"""Tune superstep knobs for one or more shapes and persist the cache.
+
+Regenerate the committed CPU defaults (run on the machine class the
+cache is for — CI runners for CI gates, your TPU host for TPU caches):
+
+  PYTHONPATH=src python -m repro.tune --n 8 16 50 \\
+      --out src/repro/tune/cpu_default.json
+
+By default the output file is **merged over** (same-shape entries
+replaced, other shapes kept) so caches accumulate across hardware and
+population sizes; ``--fresh`` starts empty.  Exit status 0 on success.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .cache import DEFAULT_CACHE_PATH, TuningCache
+from .space import DEFAULT_CHUNKS, Candidate, candidate_space
+from .tuner import tune_into
+from .workload import mlp_runner_factory
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--n", type=int, nargs="+", default=[8, 16, 50],
+                    help="population sizes to tune (tiny-MLP workload)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=32,
+                    help="stage-2 timed rounds per survivor")
+    ap.add_argument("--chunks", type=int, nargs="+",
+                    default=list(DEFAULT_CHUNKS))
+    ap.add_argument("--devices", type=int, default=None,
+                    help="node-axis shard count (default: unsharded)")
+    ap.add_argument("--prune-ratio", type=float, default=2.0)
+    ap.add_argument("--keep", type=int, default=8)
+    ap.add_argument("--include-pallas", action="store_true",
+                    help="force Pallas candidates into the space "
+                         "(default: TPU backend only)")
+    ap.add_argument("--out", default=str(DEFAULT_CACHE_PATH))
+    ap.add_argument("--fresh", action="store_true",
+                    help="start from an empty cache instead of merging "
+                         "over --out")
+    args = ap.parse_args(argv)
+
+    cache = TuningCache() if args.fresh else TuningCache.load(args.out)
+    for n in args.n:
+        factory = mlp_runner_factory(n, batch=args.batch,
+                                     mesh_devices=args.devices)
+        from .resolve import shape_of
+        probe = factory(Candidate())
+        shape = shape_of(probe.cfg, probe.params)
+        cands = candidate_space(
+            shape, chunks=tuple(args.chunks),
+            include_pallas=args.include_pallas or None)
+        result = tune_into(cache, factory, shape=shape, candidates=cands,
+                           rounds=args.rounds,
+                           prune_ratio=args.prune_ratio, keep=args.keep,
+                           verbose=True)
+        best = result.best
+        print(f"tune,best,{shape.key()},{best.label()},"
+              f"{result.seconds_per_round[best] * 1e3:.3f}ms/round",
+              flush=True)
+    cache.save(args.out)
+    print(f"tune,saved,{args.out},{len(cache)}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""Versioned on-disk tuning cache (DESIGN.md §10).
+
+One JSON file maps *shape keys* — ``(backend, n, D, devices, net)``
+canonicalized by :meth:`TuneShape.key` — to the knob assignment the
+tuner picked for that shape.  The file carries a ``schema_version``;
+loading a file written by a different schema yields an **empty** cache
+(stale entries must never silently steer a newer engine), which the
+``"auto"`` resolution then treats as "no entry": it falls back to the
+hand-set defaults.
+
+The repo ships a committed CPU cache (``cpu_default.json``, generated
+by ``python -m repro.tune``) so ``"auto"`` knobs resolve out of the box
+on the shapes the benchmarks run; ``REPRO_TUNE_CACHE`` points resolution
+at a different file (e.g. one produced by retuning on a TPU host).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Optional
+
+CACHE_VERSION = 1
+ENV_CACHE = "REPRO_TUNE_CACHE"
+DEFAULT_CACHE_PATH = Path(__file__).parent / "cpu_default.json"
+
+
+@dataclass(frozen=True)
+class TuneShape:
+    """The cache key: everything the superstep's compiled program (and
+    therefore its optimal knobs) depends on, coarse-grained to stay
+    portable across workloads with the same footprint."""
+    backend: str                 # jax.default_backend(): cpu / tpu / gpu
+    n: int                       # logical population size
+    d: int                       # per-node flattened parameter count
+    devices: int = 1             # node-axis shard count (1 = unsharded)
+    net: int = 0                 # dense-network ring depth S (0 = none)
+
+    def key(self) -> str:
+        """Canonical string key, stable across sessions."""
+        return (f"{self.backend}|n={self.n}|d={self.d}"
+                f"|devices={self.devices}|net={self.net}")
+
+
+@dataclass(frozen=True)
+class TuneEntry:
+    """One resolved knob assignment.  Field defaults are exactly the
+    engine's hand-set defaults, so ``TuneEntry()`` doubles as the
+    no-cache-entry fallback."""
+    block_d: Optional[int] = None        # kernel D-block (None = library
+                                         # heuristic, ops.pick_block_d)
+    collective: str = "gather"           # sharded mixing schedule
+    chunk: Optional[int] = None          # rounds per compiled dispatch
+    use_pallas: bool = False             # winning kernel path (recorded;
+                                         # resolution never flips the
+                                         # user's use_pallas setting)
+    seconds_per_round: Optional[float] = None   # stage-2 measurement
+    tuned: Dict[str, object] = field(default_factory=dict)  # provenance
+                                         # (jax version, candidate count)
+
+
+class TuningCache:
+    """In-memory view of one cache file: ``get``/``put`` by
+    :class:`TuneShape`, round-tripped through versioned JSON."""
+
+    def __init__(self, entries: Optional[Dict[str, TuneEntry]] = None):
+        self.entries: Dict[str, TuneEntry] = dict(entries or {})
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def get(self, shape: TuneShape) -> Optional[TuneEntry]:
+        """The entry for ``shape``, or None (exact key match only — a
+        near-miss shape re-tunes rather than inheriting stale knobs)."""
+        return self.entries.get(shape.key())
+
+    def put(self, shape: TuneShape, entry: TuneEntry) -> None:
+        """Insert/replace the entry for ``shape``."""
+        self.entries[shape.key()] = entry
+
+    # -- persistence -------------------------------------------------------
+
+    @classmethod
+    def load(cls, path) -> "TuningCache":
+        """Load ``path``; a missing file or a ``schema_version`` other
+        than :data:`CACHE_VERSION` yields an empty cache."""
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return cls()
+        if payload.get("schema_version") != CACHE_VERSION:
+            return cls()
+        entries = {}
+        fields = {f.name for f in dataclasses.fields(TuneEntry)}
+        for key, raw in payload.get("entries", {}).items():
+            entries[key] = TuneEntry(
+                **{k: v for k, v in raw.items() if k in fields})
+        return cls(entries)
+
+    def save(self, path) -> None:
+        """Write the versioned JSON (parent directories created)."""
+        payload = {
+            "schema_version": CACHE_VERSION,
+            "entries": {key: dataclasses.asdict(e)
+                        for key, e in sorted(self.entries.items())},
+        }
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+
+def load_default_cache() -> TuningCache:
+    """The cache ``"auto"`` resolution consults: ``$REPRO_TUNE_CACHE``
+    when set, else the committed CPU defaults."""
+    return TuningCache.load(os.environ.get(ENV_CACHE)
+                            or DEFAULT_CACHE_PATH)

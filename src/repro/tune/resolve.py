@@ -1,0 +1,79 @@
+"""``"auto"`` knob resolution for :class:`repro.dlrt.RunnerConfig`.
+
+``DecentralizedRunner._make_engine`` calls :func:`resolve_knobs` before
+the compiled engine is built.  Resolution is a pure function of
+``(cfg, params, cache file contents)`` — no timing, no lowering — so an
+``"auto"`` run is deterministic and **bit-identical** to a run that
+passes the resolved values explicitly (tested in tests/test_tune.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from .cache import TuneEntry, TuneShape, TuningCache, load_default_cache
+
+AUTO = "auto"
+
+
+@dataclass(frozen=True)
+class ResolvedKnobs:
+    """Concrete knob values handed to :class:`CompiledSuperstep`, plus
+    where they came from (``explicit`` — nothing was "auto";
+    ``cache:<key>`` — the tuning cache had the shape; ``default:<key>``
+    — "auto" requested but no entry, hand-set defaults used)."""
+    block_d: Optional[int]
+    collective: str
+    chunk: Optional[int]
+    source: str
+
+
+def shape_of(cfg, params) -> TuneShape:
+    """The :class:`TuneShape` cache key for a runner configuration and
+    its node-stacked parameters."""
+    import jax
+
+    from ..dlrt.runtime import stacked_model_bytes
+    n = cfg.n_nodes
+    leaves = jax.tree_util.tree_leaves(params)
+    d = sum(leaf.size // n for leaf in leaves)
+    if cfg.mesh_devices is None:
+        devices = 1
+    else:
+        devices = cfg.mesh_devices or jax.local_device_count()
+    net = 0
+    if cfg.net is not None:
+        model_bytes = cfg.model_bytes or stacked_model_bytes(params, n)
+        net = cfg.net.depth(model_bytes)
+    return TuneShape(backend=jax.default_backend(), n=n, d=d,
+                     devices=devices, net=net)
+
+
+def resolve_knobs(cfg, params,
+                  cache: Optional[TuningCache] = None) -> ResolvedKnobs:
+    """Resolve ``cfg``'s performance knobs to concrete values.
+
+    Knobs not set to ``"auto"`` pass through untouched.  ``"auto"``
+    knobs take the cached entry's value for this run's shape, or the
+    hand-set default (``TuneEntry()``'s field defaults) when the cache
+    has no entry — so enabling ``"auto"`` can never make an untuned
+    shape slower than before.
+    """
+    autos = (cfg.block_d == AUTO, cfg.collective == AUTO,
+             cfg.chunk == AUTO)
+    if not any(autos):
+        return ResolvedKnobs(block_d=cfg.block_d,
+                             collective=cfg.collective,
+                             chunk=cfg.chunk, source="explicit")
+    shape = shape_of(cfg, params)
+    if cache is None:
+        cache = load_default_cache()
+    entry = cache.get(shape)
+    source = (f"cache:{shape.key()}" if entry is not None
+              else f"default:{shape.key()}")
+    e = entry or TuneEntry()
+    return ResolvedKnobs(
+        block_d=e.block_d if autos[0] else cfg.block_d,
+        collective=e.collective if autos[1] else cfg.collective,
+        chunk=e.chunk if autos[2] else cfg.chunk,
+        source=source)

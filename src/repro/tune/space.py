@@ -1,0 +1,64 @@
+"""Candidate space for the superstep knobs, per tuning shape.
+
+The space is deliberately shape-aware rather than a fixed grid:
+
+* ``chunk`` (rounds per compiled dispatch) always varies — it trades
+  dispatch amortization against compile time and is the dominant CPU
+  knob;
+* ``collective`` adds ``"psum"`` only when the node axis is actually
+  sharded and no dense network model is attached (the snapshot ring
+  requires the ``"gather"`` schedule);
+* Pallas candidates (``use_pallas`` x ``block_d``) are generated only
+  where they can win: on TPU they compile to Mosaic; on CPU interpret
+  mode is a correctness path, so they are included only on request
+  (``include_pallas=True``) — stage 1/2 then demonstrate the rejection
+  rather than assuming it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from .cache import TuneShape
+
+DEFAULT_CHUNKS = (8, 16, 32, 64)
+DEFAULT_BLOCK_DS = (128, 256, 512)
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One knob assignment the tuner lowers (stage 1) and may time
+    (stage 2).  Field meanings match ``RunnerConfig``."""
+    chunk: int = 32
+    collective: str = "gather"
+    block_d: Optional[int] = None
+    use_pallas: bool = False
+
+    def label(self) -> str:
+        """Short human-readable tag for logs and cache provenance."""
+        parts = [f"chunk={self.chunk}", self.collective]
+        if self.use_pallas:
+            parts.append(f"pallas(block_d={self.block_d})")
+        return "/".join(parts)
+
+
+def candidate_space(shape: TuneShape, *,
+                    chunks: Sequence[int] = DEFAULT_CHUNKS,
+                    block_ds: Sequence[int] = DEFAULT_BLOCK_DS,
+                    include_pallas: Optional[bool] = None
+                    ) -> List[Candidate]:
+    """Deterministically ordered candidates for ``shape`` (see module
+    docstring for the gating rules)."""
+    if include_pallas is None:
+        include_pallas = shape.backend == "tpu"
+    collectives = ["gather"]
+    if shape.devices > 1 and shape.net == 0:
+        collectives.append("psum")
+    kernel_paths = [(False, None)]
+    if include_pallas:
+        kernel_paths += [(True, bd) for bd in block_ds
+                         if bd <= max(shape.d, min(block_ds))]
+    return [Candidate(chunk=c, collective=col, block_d=bd, use_pallas=up)
+            for c in chunks
+            for col in collectives
+            for up, bd in kernel_paths]

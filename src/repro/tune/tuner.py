@@ -1,0 +1,159 @@
+"""Two-stage superstep autotuner (DESIGN.md §10).
+
+**Stage 1 — lower, cost, prune.**  Every candidate's superstep is
+compiled (never executed) via :meth:`CompiledSuperstep.compiled_hlo` and
+costed with the trip-count-aware HLO model
+(:func:`repro.launch.hlo_cost.analyse_hlo`).  The per-round roofline
+score — FLOPs, HBM bytes and weighted collective bytes against the
+backend's peaks, plus an amortized per-dispatch overhead — prunes the
+space: candidates more than ``prune_ratio`` x the best score are
+dropped, the rest capped at ``keep``.  The cost model orders *memory and
+collective schedules* reliably (psum vs gather, padding blowups); it
+cannot see dispatch latency differences between chunk lengths — those
+survive to stage 2 by construction, because the score differences
+between chunks are tiny (tests/test_tune.py cross-checks that pruning
+never drops the empirically best candidate on tiny shapes).
+
+**Stage 2 — time the survivors.**  Each survivor gets a fresh engine, a
+full compile-and-warm superstep, then a timed ``run_steps`` micro-run;
+the argmin wall-clock per round wins and is persisted as a
+:class:`TuneEntry`.
+
+The same tuner runs unchanged on a real TPU: backend peaks switch, the
+candidate space grows Pallas/block_d members, and the resulting entries
+land in a cache file that ``REPRO_TUNE_CACHE`` points resolution at.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from ..launch.hlo_cost import analyse_hlo
+from .cache import TuneEntry, TuneShape, TuningCache
+from .resolve import shape_of
+from .space import Candidate, candidate_space
+
+# First-order backend peaks for the stage-1 score (FLOP/s, B/s HBM,
+# B/s interconnect, seconds of per-dispatch overhead).  These only need
+# to *order* candidates, not predict wall-clock.
+PEAKS = {
+    "cpu": {"flops": 5e10, "bytes": 3e10, "collective": 1e10,
+            "dispatch_s": 5e-5},
+    "gpu": {"flops": 5e13, "bytes": 1e12, "collective": 3e11,
+            "dispatch_s": 1e-5},
+    "tpu": {"flops": 197e12, "bytes": 819e9, "collective": 50e9,
+            "dispatch_s": 5e-6},
+}
+
+
+@dataclass
+class TuneResult:
+    """Everything one :func:`tune` call learned, for logging/tests."""
+    shape: TuneShape
+    best: Candidate
+    survivors: List[Candidate]
+    stage1_scores: Dict[Candidate, float] = field(default_factory=dict)
+    stage1_costs: Dict[Candidate, Dict] = field(default_factory=dict)
+    seconds_per_round: Dict[Candidate, float] = field(default_factory=dict)
+
+    def entry(self, **tuned) -> TuneEntry:
+        """The winning candidate as a persistable cache entry."""
+        return TuneEntry(
+            block_d=self.best.block_d, collective=self.best.collective,
+            chunk=self.best.chunk, use_pallas=self.best.use_pallas,
+            seconds_per_round=self.seconds_per_round.get(self.best),
+            tuned={"candidates": len(self.stage1_scores),
+                   "survivors": len(self.survivors), **tuned})
+
+
+def stage1_score(cost: Dict, chunk: int, backend: str) -> float:
+    """Per-round roofline seconds for one candidate's compiled-HLO cost
+    dict (plus amortized per-dispatch overhead)."""
+    p = PEAKS.get(backend, PEAKS["cpu"])
+    per_chunk = (cost["flops"] / p["flops"]
+                 + cost["bytes"] / p["bytes"]
+                 + cost["collective_bytes"] / p["collective"])
+    return per_chunk / chunk + p["dispatch_s"] / chunk
+
+
+def prune(scores: Dict[Candidate, float], *, prune_ratio: float = 2.0,
+          keep: int = 8) -> List[Candidate]:
+    """Stage-1 survivors: within ``prune_ratio`` of the best score,
+    best-first, at most ``keep`` (never empty)."""
+    ranked = sorted(scores, key=lambda c: scores[c])
+    best = scores[ranked[0]]
+    surv = [c for c in ranked if scores[c] <= best * prune_ratio]
+    return surv[:keep] or ranked[:1]
+
+
+def time_engine(engine, chunk: int, rounds: int) -> float:
+    """Default stage-2 timer: two warm-up supersteps (compile, then one
+    post-compile dispatch whose one-time overhead must stay out of the
+    measurement), then ``rounds`` rounds (rounded up to whole chunks)
+    timed; returns wall-clock seconds per round."""
+    chunk = max(min(chunk, rounds), 1)
+    total = math.ceil(rounds / chunk) * chunk
+    engine.run_steps(2 * chunk, chunk)
+    t0 = time.perf_counter()
+    engine.run_steps(total, chunk)
+    return (time.perf_counter() - t0) / total
+
+
+def tune(make_runner: Callable[[Candidate], object], *,
+         shape: Optional[TuneShape] = None,
+         candidates: Optional[Sequence[Candidate]] = None,
+         rounds: int = 24, prune_ratio: float = 2.0, keep: int = 8,
+         timer: Callable = time_engine,
+         verbose: bool = False) -> TuneResult:
+    """Tune one shape.
+
+    ``make_runner(candidate)`` must build a **fresh**
+    :class:`DecentralizedRunner` whose config carries the candidate's
+    knobs concretely (state is consumed by both stages, so each call
+    must start from the same seed).  ``shape``/``candidates`` default to
+    the first runner's :func:`shape_of` and :func:`candidate_space`.
+    ``timer(engine, chunk, rounds) -> seconds_per_round`` is injectable
+    for deterministic tests.
+    """
+    probe = make_runner(Candidate())
+    if shape is None:
+        shape = shape_of(probe.cfg, probe.params)
+    if candidates is None:
+        candidates = candidate_space(shape)
+
+    result = TuneResult(shape=shape, best=candidates[0], survivors=[])
+    for cand in candidates:
+        engine = make_runner(cand)._make_engine()
+        cost = analyse_hlo(engine.compiled_hlo(cand.chunk))
+        score = stage1_score(cost, cand.chunk, shape.backend)
+        result.stage1_costs[cand] = cost
+        result.stage1_scores[cand] = score
+        if verbose:
+            print(f"tune,stage1,{shape.key()},{cand.label()},"
+                  f"{score:.3e}", flush=True)
+
+    result.survivors = prune(result.stage1_scores,
+                             prune_ratio=prune_ratio, keep=keep)
+    for cand in result.survivors:
+        engine = make_runner(cand)._make_engine()
+        spr = timer(engine, cand.chunk, rounds)
+        result.seconds_per_round[cand] = spr
+        if verbose:
+            print(f"tune,stage2,{shape.key()},{cand.label()},"
+                  f"{spr * 1e3:.3f}ms/round", flush=True)
+
+    result.best = min(result.seconds_per_round,
+                      key=lambda c: result.seconds_per_round[c])
+    return result
+
+
+def tune_into(cache: TuningCache, make_runner, **kwargs) -> TuneResult:
+    """:func:`tune`, then persist the winner into ``cache`` (caller
+    saves).  Provenance records the jax version the timing ran under."""
+    import jax
+    result = tune(make_runner, **kwargs)
+    cache.put(result.shape, result.entry(jax=jax.__version__,
+                                         backend=result.shape.backend))
+    return result

@@ -1,0 +1,63 @@
+"""Tuning workloads: runner factories the tuner drives.
+
+The canonical one is the fig9/fig11 tiny-MLP Morph population
+(``repro.models.tiny`` over synthetic non-IID images) — the same
+workload the engine benchmarks measure, so cache entries generated here
+are exactly what ``benchmarks/fig9_superstep.py``'s ``"auto"`` rows
+resolve to.  The dataset recipe mirrors
+``benchmarks.common.tiny_mlp_experiment`` (the cache key only depends
+on ``(n, D)``, and D is fixed by the ``mlp_params`` defaults).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from .space import Candidate
+
+
+def mlp_runner_factory(n: int, *, batch: int = 4, rounds: int = 10 ** 9,
+                       seed: int = 0, k: int = 3, sim_every: int = 5,
+                       mesh_devices: Optional[int] = None,
+                       net=None) -> Callable[[Candidate], object]:
+    """``make_runner(candidate)`` for the tiny-MLP Morph workload at
+    population size ``n`` (fig9's configuration: ``sim_every=5``,
+    ``view_size=k+2``).  Each call builds a fresh runner from the same
+    seed with the candidate's knobs set concretely; on CPU, Pallas
+    candidates run in interpret mode."""
+    import jax
+
+    from ..core import InGraphMorphStrategy
+    from ..data import (dirichlet_partition, make_image_classification,
+                        train_test_split)
+    from ..data.pipeline import StackedBatcher
+    from ..dlrt import DecentralizedRunner, RunnerConfig
+    from ..models.tiny import mlp_loss, mlp_params
+    from ..optim import sgd
+
+    rng = np.random.default_rng(seed)
+    ds = make_image_classification(max(600, n * 20), num_classes=4,
+                                   image_size=8, seed=seed)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, n, 0.5, rng)
+    test = {"images": te.images[:64], "labels": te.labels[:64]}
+    interpret_on = jax.default_backend() == "cpu"
+
+    def make_runner(cand: Candidate):
+        return DecentralizedRunner(
+            init_fn=mlp_params, loss_fn=mlp_loss, eval_fn=mlp_loss,
+            optimizer=sgd(0.05),
+            batcher=StackedBatcher(tr, parts, batch, seed=seed + 3),
+            test_batch=test,
+            strategy=InGraphMorphStrategy(n=n, k=k, view_size=k + 2,
+                                          seed=seed),
+            cfg=RunnerConfig(
+                n_nodes=n, rounds=rounds, eval_every=10 ** 9,
+                sim_every=sim_every, seed=seed, compiled=True,
+                use_pallas=cand.use_pallas,
+                interpret=cand.use_pallas and interpret_on,
+                block_d=cand.block_d, collective=cand.collective,
+                chunk=cand.chunk, mesh_devices=mesh_devices, net=net))
+
+    return make_runner

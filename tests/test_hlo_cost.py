@@ -48,6 +48,25 @@ def test_nested_scans_multiply():
     assert res["unknown_trip_whiles"] == 0
 
 
+def test_op_counts_trip_weighted():
+    """The executed-op tally multiplies by scan trip counts and sums
+    into op_count_total — the perf CI gate's op-count metric."""
+    s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    res = _cost(f, s)
+    assert res["op_count_total"] == pytest.approx(
+        sum(res["op_counts"].values()))
+    # the body's dot executes 7 times (it may appear as "dot" or be
+    # wrapped in a counted fusion — either way >= 7 body ops show up)
+    body_ops = res["op_count_total"] - res["op_counts"].get("while", 0)
+    assert body_ops >= 7
+
+
 def test_bytes_positive_and_bounded_below_by_io():
     s = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
     res = _cost(lambda x: x + 1.0, s)

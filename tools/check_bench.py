@@ -1,0 +1,173 @@
+#!/usr/bin/env python
+"""Gate benchmark regressions against committed baselines.
+
+Compares freshly produced ``BENCH_<name>.json`` files (written by
+``benchmarks/harness.py`` under ``--bench-dir``) against the committed
+files in ``--baseline-dir``:
+
+* **hard-fail** — deterministic cost-model columns (``hlo.flops``,
+  ``hlo.bytes``, ``hlo.collective_bytes``, ``hlo.op_count_total``)
+  regressing beyond ``--tol`` (relative), and baseline records/files
+  missing from the new output;
+* **warn-only** — wall-clock columns (``rounds_per_sec`` /
+  ``wall_clock_s``): CI runner noise must never fail the build;
+  improvements beyond tolerance on the hard metrics (a prompt to
+  re-commit tighter baselines); new records absent from the baseline.
+
+Baselines embed the jax version and backend they were produced under;
+when either differs from the fresh run, the HLO program legitimately
+changes, so hard failures downgrade to warnings and the tool tells you
+to regenerate (``--update`` copies the fresh files over the baselines).
+
+Usage:
+  python tools/check_bench.py --bench-dir bench_out \\
+      [--baseline-dir benchmarks/baselines] [--tol 0.5] [--update]
+Exit status: number of hard failures (capped at 125); 0 in warn-only
+mode.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+HARD_METRICS = ("flops", "bytes", "collective_bytes", "op_count_total")
+SOFT_FIELDS = ("rounds_per_sec", "wall_clock_s")
+WALL_WARN_RATIO = 1.5
+
+
+def load(path: Path):
+    with open(path) as f:
+        payload = json.load(f)
+    records = {r["key"]: r for r in payload.get("records", [])}
+    return payload, records
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--bench-dir", default="bench_out")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="relative tolerance on the hard HLO-cost "
+                         "metrics")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh BENCH files over the baselines "
+                         "(for committing after an accepted change)")
+    args = ap.parse_args(argv)
+
+    bench_dir = Path(args.bench_dir)
+    baseline_dir = Path(args.baseline_dir)
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no baselines under {baseline_dir}", file=sys.stderr)
+        return 1
+
+    failures = 0
+    warnings = 0
+
+    def fail(msg):
+        nonlocal failures
+        failures += 1
+        print(f"FAIL  {msg}")
+
+    def warn(msg):
+        nonlocal warnings
+        warnings += 1
+        print(f"WARN  {msg}")
+
+    for bpath in baselines:
+        npath = bench_dir / bpath.name
+        if not npath.exists():
+            fail(f"{bpath.name}: missing from {bench_dir} "
+                 "(section not run?)")
+            continue
+        bpay, brecs = load(bpath)
+        npay, nrecs = load(npath)
+        env_match = (bpay.get("jax") == npay.get("jax")
+                     and bpay.get("backend") == npay.get("backend"))
+        hard = fail if env_match else warn
+        if not env_match:
+            warn(f"{bpath.name}: baseline env jax={bpay.get('jax')}/"
+                 f"{bpay.get('backend')} != run env {npay.get('jax')}/"
+                 f"{npay.get('backend')} — HLO gates downgraded to "
+                 "warnings; regenerate with --update")
+        if bpay.get("schema_version") != npay.get("schema_version"):
+            hard(f"{bpath.name}: schema_version "
+                 f"{npay.get('schema_version')} != baseline "
+                 f"{bpay.get('schema_version')}")
+
+        for key, brec in brecs.items():
+            nrec = nrecs.get(key)
+            if nrec is None:
+                hard(f"{bpath.name}:{key}: record disappeared")
+                continue
+            bh, nh = brec.get("hlo"), nrec.get("hlo")
+            if bh:
+                if not nh:
+                    hard(f"{bpath.name}:{key}: hlo columns disappeared")
+                else:
+                    for metric in HARD_METRICS:
+                        bv, nv = bh.get(metric), nh.get(metric)
+                        if bv is None:
+                            continue
+                        if nv is None:
+                            hard(f"{bpath.name}:{key}: hlo.{metric} "
+                                 "disappeared from the record")
+                            continue
+                        if not bv:
+                            # zero baseline: any appearance is the
+                            # regression class this gate exists for
+                            # (e.g. a collective sneaking into the scan)
+                            if nv:
+                                hard(f"{bpath.name}:{key}: hlo.{metric} "
+                                     f"appeared ({nv:.3g}) vs zero "
+                                     "baseline")
+                            continue
+                        rel = (nv - bv) / bv
+                        if rel > args.tol:
+                            hard(f"{bpath.name}:{key}: hlo.{metric} "
+                                 f"{nv:.3g} is {rel:+.0%} vs baseline "
+                                 f"{bv:.3g} (tol {args.tol:.0%})")
+                        elif rel < -args.tol:
+                            warn(f"{bpath.name}:{key}: hlo.{metric} "
+                                 f"improved {rel:+.0%} — consider "
+                                 "--update to tighten the baseline")
+            for field in SOFT_FIELDS:
+                bv, nv = brec.get(field), nrec.get(field)
+                if not bv or not nv:
+                    continue
+                worse = (bv / nv if field == "rounds_per_sec"
+                         else nv / bv)
+                if worse > WALL_WARN_RATIO:
+                    warn(f"{bpath.name}:{key}: {field} {nv:.3g} vs "
+                         f"baseline {bv:.3g} ({worse:.1f}x worse — "
+                         "wall-clock is warn-only)")
+        for key in nrecs:
+            if key not in brecs:
+                warn(f"{bpath.name}:{key}: new record not in baseline")
+
+        if args.update:
+            baseline_dir.mkdir(parents=True, exist_ok=True)
+            shutil.copyfile(npath, bpath)
+            print(f"UPDATED  {bpath}")
+
+    if args.update:
+        # newly gated sections: bench files with no baseline yet
+        known = {b.name for b in baselines}
+        for npath in sorted(bench_dir.glob("BENCH_*.json")):
+            if npath.name not in known:
+                baseline_dir.mkdir(parents=True, exist_ok=True)
+                shutil.copyfile(npath, baseline_dir / npath.name)
+                print(f"CREATED  {baseline_dir / npath.name}")
+
+    print(f"\ncheck_bench: {failures} failure(s), {warnings} warning(s) "
+          f"across {len(baselines)} baseline file(s)")
+    return min(failures, 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

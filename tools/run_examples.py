@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Smoke-run the examples/ scripts at tiny scale (the docs CI job).
+
+Each example reads ``EXAMPLE_NODES`` / ``EXAMPLE_ROUNDS`` from the
+environment, so the same scripts users run at demo scale execute here
+in seconds — the point is that they *run*, not that the numbers mean
+anything.  A failing or hanging example fails the job with its tail of
+output, so the examples can't silently rot as the APIs move.
+
+Usage:  python tools/run_examples.py [--timeout SECONDS] [names...]
+Exit status: number of failing examples (capped at 125).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+# (script, env overrides): rounds chosen so every script finishes well
+# under a minute on a CI runner, compile time included.
+EXAMPLES = [
+    ("quickstart.py", {"EXAMPLE_NODES": "4", "EXAMPLE_ROUNDS": "6"}),
+    ("compiled_superstep.py", {"EXAMPLE_NODES": "6",
+                               "EXAMPLE_ROUNDS": "8"}),
+    ("async_morph.py", {"EXAMPLE_NODES": "5", "EXAMPLE_ROUNDS": "6"}),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*",
+                    help="subset of example filenames (default: all)")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    args = ap.parse_args(argv)
+
+    root = Path(__file__).resolve().parent.parent
+    todo = [(s, e) for s, e in EXAMPLES
+            if not args.names or s in args.names]
+    if not todo:
+        print(f"no examples match {args.names}", file=sys.stderr)
+        return 1
+
+    failures = 0
+    for script, overrides in todo:
+        env = dict(os.environ, **overrides)
+        env["PYTHONPATH"] = "src" + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH")
+            else "")
+        t0 = time.time()
+        try:
+            proc = subprocess.run(
+                [sys.executable, str(root / "examples" / script)],
+                cwd=root, env=env, capture_output=True, text=True,
+                timeout=args.timeout)
+            ok = proc.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok, proc = False, None
+        dt = time.time() - t0
+        scale = " ".join(f"{k}={v}" for k, v in overrides.items())
+        if ok:
+            print(f"OK    examples/{script}   [{dt:.0f}s  {scale}]")
+        else:
+            failures += 1
+            print(f"FAIL  examples/{script}   [{dt:.0f}s  {scale}]")
+            if proc is not None:
+                sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-2000:])
+            else:
+                sys.stderr.write(f"  timed out after {args.timeout}s\n")
+    if failures:
+        print(f"\n{failures} example(s) failed", file=sys.stderr)
+    else:
+        print("\nexamples: OK")
+    return min(failures, 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

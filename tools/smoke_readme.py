@@ -24,6 +24,12 @@ SKIP = [
     ("pip install", "mutates the environment"),
     ("-m pytest", "covered by the tier-1 CI job"),
     ("-m benchmarks.run", "full sweep; sections run individually in CI"),
+    ("python examples/", "smoke-run at tiny scale by "
+                         "tools/run_examples.py (docs CI job)"),
+    ("-m repro.tune", "retuning run; the committed cache is the "
+                      "artifact under test"),
+    ("check_bench.py", "needs a fresh bench_out; exercised by the "
+                       "perf CI job"),
     ("smoke_readme", "would recurse"),
 ]
 
