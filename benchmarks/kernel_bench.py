@@ -29,6 +29,8 @@ def main(argv=None):
     ap.add_argument("--sizes", type=int, nargs="+",
                     default=[16384, 262144])
     ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--k", type=int, default=3,
+                    help="in-degree for the block-sparse graph_mix row")
     args = ap.parse_args(argv)
 
     bench = harness.bench("kernels")
@@ -47,6 +49,22 @@ def main(argv=None):
         bench.record(f"graph_mix/n{args.n}/d{d}",
                      f"{t_mix:.0f}", wall_clock_s=t_mix / 1e6,
                      knobs=knobs, oracle_us=round(t_mix_ref))
+        # block-sparse graph_mix: [n,k] CSR adjacency, Pallas interpret
+        # vs the XLA gather fallback (the off-TPU production path).
+        n, k = args.n, args.k
+        rng = jax.random.PRNGKey(2)
+        idx = (jnp.arange(n, dtype=jnp.int32)[:, None]
+               + jnp.arange(1, k + 1, dtype=jnp.int32)[None, :]) % n
+        ws = jnp.full((n, k), 1.0 / (k + 1), jnp.float32)
+        w_self = jnp.full((n,), 1.0 / (k + 1), jnp.float32)
+        xs = jax.random.normal(rng, (n, d))
+        t_sp = _time(lambda *a: ops.mix_sparse(*a, interpret=True),
+                     idx, ws, w_self, xs)
+        t_sp_ref = _time(jax.jit(lambda *a: ops.mix_sparse(*a)),
+                         idx, ws, w_self, xs)
+        bench.record(f"graph_mix_sparse/n{n}/k{k}/d{d}",
+                     f"{t_sp:.0f}", wall_clock_s=t_sp / 1e6,
+                     knobs=knobs, oracle_us=round(t_sp_ref))
     bench.finish()
 
 

@@ -84,7 +84,7 @@ def main(argv=None):
     from . import (fig2_connectivity, fig3_curves, fig4_connectivity_levels,
                    fig5_ablation, fig67_isolation, fig8_async,
                    fig9_superstep, fig10_sharded, fig11_fused_net,
-                   kernel_bench, roofline, table1_accuracy)
+                   fig12_sparse, kernel_bench, roofline, table1_accuracy)
 
     sections = [
         ("fig2", lambda: fig2_connectivity.main(
@@ -128,6 +128,11 @@ def main(argv=None):
                else ["--nodes", "6", "--profiles", "ideal", "wan",
                      "--strategies", "morph", "el-oracle"] if args.smoke
                else ["--nodes", "50"]))),
+        ("fig12", lambda: fig12_sparse.main(
+            ["--rounds", str(size(20, 12, 6))]
+            + (["--nodes", "100", "1000", "10000"] if args.full
+               else ["--nodes", "24", "--hlo-devices", "2"] if args.smoke
+               else ["--nodes", "64", "256", "--hlo-devices", "4"]))),
         ("kernels", lambda: kernel_bench.main(
             ["--sizes", "65536"] if args.smoke else [])),
         ("roofline", lambda: roofline.main(["--csv"])),

@@ -91,12 +91,20 @@ from ..core.mixing import uniform_weights_jax
 from ..data.pipeline import DeviceDataStream, StackedBatcher
 from ..kernels import ops
 from ..optim import Optimizer
+from ..sparse.adjacency import (SparseAdjacency, dense_to_csr,
+                                pad_adjacency)
+from ..sparse.mix import sparse_mix_pytree
 from .metrics import MetricsLog, RoundRecord
 from .runtime import (RunnerConfig, make_evaluator, make_local_step,
                       make_round_record, net_staleness_mean,
                       stacked_model_bytes)
 
 COLLECTIVES = ("gather", "psum")
+ENGINES = ("dense", "sparse")
+SPARSE_MIX_MODES = ("exact", "gather")
+# Above this population the sparse engine stops decoding dense [n, n]
+# edge matrices into edge_history and appends compact (idx, mask) pairs.
+SPARSE_EDGE_DECODE_MAX = 4096
 
 
 def eval_boundaries(rounds: int, eval_every: int) -> List[Tuple[int, int]]:
@@ -158,7 +166,19 @@ class CompiledSuperstep:
       one superstep per eval chunk).  Trajectory-invariant; this and
       ``block_d``/``collective`` must arrive concrete — ``"auto"``
       sentinels are resolved upstream by ``repro.tune`` (DESIGN.md
-      §10).
+      §10);
+    * ``engine`` — ``"dense"`` (the original path) or ``"sparse"``
+      (DESIGN.md §11).  Sparse-native strategies (``sparse = True``,
+      e.g. :class:`repro.sparse.SparseMorphStrategy`) carry CSR
+      ``[n, k]`` adjacency through the scan, mix in O(n·k·D) and emit
+      ``(idx, mask)`` stacks instead of ``[K, n, n]`` edges; dense
+      strategies under ``engine="sparse"`` run in **compat mode**,
+      governed by ``sparse_mix``;
+    * ``sparse_mix`` — compat-mode numerics: ``"exact"`` mixes through
+      the identical dense contraction (bitwise vs the dense engine —
+      the conformance anchor), ``"gather"`` converts each round's
+      ``(edges, w)`` to CSR in-scan and mixes through the sparse
+      gather path (parity to tolerance).
 
     Invariants: ``params`` / ``opt_state`` expose the logical ``[n,
     ...]`` view even in sharded mode (padding is internal); the decoded
@@ -176,8 +196,10 @@ class CompiledSuperstep:
                  params=None, opt_state=None,
                  mesh=None, collective: str = "gather",
                  data_stream: Optional[DeviceDataStream] = None,
-                 net=None, chunk: Optional[int] = None):
-        if isinstance(block_d, str) or isinstance(chunk, str):
+                 net=None, chunk: Optional[int] = None,
+                 engine: str = "dense", sparse_mix: str = "exact"):
+        if isinstance(block_d, str) or isinstance(chunk, str) \
+                or engine == "auto":
             raise TypeError(
                 "the engine takes concrete knobs; \"auto\" sentinels are "
                 "resolved by DecentralizedRunner via repro.tune."
@@ -190,6 +212,28 @@ class CompiledSuperstep:
         if collective not in COLLECTIVES:
             raise ValueError(f"collective={collective!r} not in "
                              f"{COLLECTIVES}")
+        if engine not in ENGINES:
+            raise ValueError(f"engine={engine!r} not in {ENGINES}")
+        if sparse_mix not in SPARSE_MIX_MODES:
+            raise ValueError(f"sparse_mix={sparse_mix!r} not in "
+                             f"{SPARSE_MIX_MODES}")
+        sparse_native = bool(getattr(strategy, "sparse", False))
+        if sparse_native and engine != "sparse":
+            raise TypeError(
+                f"strategy {getattr(strategy, 'name', strategy)!r} returns "
+                "CSR adjacency (sparse=True); select it with "
+                "RunnerConfig.engine='sparse'")
+        if engine == "sparse" and net is not None:
+            raise ValueError(
+                "the sparse engine does not support the dense in-scan "
+                "network model yet (ROADMAP: compressed/priced gossip); "
+                "use engine='dense' with cfg.net")
+        if engine == "sparse" and not sparse_native \
+                and sparse_mix == "gather" and mesh is not None:
+            raise ValueError(
+                "compat gather-mix (dense strategy through in-scan CSR "
+                "conversion) is a single-device numerics path; sharded "
+                "runs use sparse_mix='exact' or a sparse-native strategy")
         if data_stream is None and batcher is None:
             raise ValueError("need a host batcher or a data_stream")
         if net is not None and mesh is not None and collective != "gather":
@@ -202,6 +246,10 @@ class CompiledSuperstep:
                              f"config says {cfg.n_nodes}")
         self.cfg = cfg
         self.strategy = strategy
+        self.engine = engine
+        self.sparse_native = sparse_native
+        self.sparse_mix = sparse_mix
+        self._last_isolated: Optional[int] = None
         self.batcher = batcher
         self.stream = data_stream
         # superstep-length cap (rounds per scan): eval chunks longer than
@@ -275,8 +323,17 @@ class CompiledSuperstep:
             self._netstate = ()
 
         self.gstate = strategy.init_graph_state()
-        self.sim = jnp.zeros((n, n), jnp.float32)
+        # Sparse-native strategies never consume the [n, n] similarity
+        # cache; carry an empty placeholder so the scan state stays
+        # O(n·k) at paper-scale n.
+        self.sim = jnp.zeros((0, 0), jnp.float32) if sparse_native \
+            else jnp.zeros((n, n), jnp.float32)
         needs_sim = bool(getattr(strategy, "needs_sim", False))
+        needs_params = bool(getattr(strategy, "needs_params", False))
+        # Cadence at which a sparse control plane actually reads params
+        # (SparseMorphStrategy re-negotiates every delta_r rounds) — the
+        # sharded psum schedule gates its params gather on it.
+        ctrl_every = int(getattr(strategy, "delta_r", 1) or 1)
         uniform = bool(getattr(strategy, "uniform_mixing", False))
         if not needs_sim:
             sim_fn = None
@@ -344,6 +401,22 @@ class CompiledSuperstep:
                     summed, shard_index() * n_local, n_local, 0)
                 return own.astype(leaf.dtype)
             return jax.tree_util.tree_map(one, local)
+
+        def _sparse_mix(adj, tree, rows=None):
+            # k-sparse gather mixing; the Pallas block-sparse kernel is
+            # single-device-layout only (rows=None), the jnp gather path
+            # covers the sharded row-block case.
+            if use_pallas and rows is None:
+                return ops.mix_sparse_pytree(
+                    adj.idx, adj.w, adj.w_self, tree, mask=adj.mask,
+                    block_d=block_d, interpret=interpret)
+            return sparse_mix_pytree(adj, tree, rows=rows)
+
+        # Compat mode (engine="sparse" with a dense-returning strategy)
+        # converts each round's (edges, w) in-scan; n-1 slots make the
+        # conversion lossless for any in-degree, so this is a numerics
+        # path (sparse_mix="gather" parity), not the scaling path.
+        compat_k = max(1, n - 1)
 
         def refresh_sim(rnd, params_logical, sim):
             return jax.lax.cond(
@@ -455,7 +528,16 @@ class CompiledSuperstep:
                 sim = refresh_sim(rnd, params, sim)
             gstate, edges, w = strategy.graph_round(gstate, rnd, sim)
             if net is None:
-                if use_pallas and uniform:
+                if engine == "sparse" and sparse_mix == "gather":
+                    # Compat numerics path: convert the dense round
+                    # output to CSR in-scan and mix through the sparse
+                    # gather contraction (parity-tested vs the dense
+                    # engine to tolerance; "exact" mode below is the
+                    # bitwise path).
+                    adj = dense_to_csr(edges, w.astype(jnp.float32),
+                                       compat_k)
+                    params = _sparse_mix(adj, params)
+                elif use_pallas and uniform:
                     params = ops.mix_masked_pytree(edges, params,
                                                    block_d=block_d,
                                                    interpret=interpret)
@@ -559,7 +641,89 @@ class CompiledSuperstep:
                 params = mix_psum(w_cols, params)
             return (params, opt_state, gstate, sim, netstate), edges
 
-        body = round_body_sharded if sharded else round_body
+        def round_body_sparse(carry, xs):
+            # Sparse-native single-device body: the strategy returns CSR
+            # adjacency directly and mixing is the O(n·k·D) gather
+            # contraction — no [n, n] matrix is ever materialized.
+            params, opt_state, gstate, sim, netstate = carry
+            rnd, batch = xs
+            params, opt_state = local_step(params, opt_state, batch)
+            gstate, adj = strategy.graph_round(
+                gstate, rnd, params if needs_params else None)
+            params = _sparse_mix(adj, params)
+            return (params, opt_state, gstate, sim, netstate), \
+                (adj.idx, adj.mask)
+
+        def sparse_mix_psum(apad, local, off):
+            # Push / reduce-scatter schedule: each device accumulates its
+            # local *senders'* contributions to every receiver
+            # ([n_pad, D] partial), psum_scatters that partial down to
+            # its own receiver block, then adds the self term locally —
+            # collective result bytes are n_pad·D / num_devices per leaf
+            # and compute stays O(n·k·D).
+            local_w = jnp.where(
+                apad.mask & (apad.idx >= off) & (apad.idx < off + n_local),
+                apad.w, 0.0)
+            lidx = jnp.clip(apad.idx - off, 0, n_local - 1)
+            ws_own = jax.lax.dynamic_slice_in_dim(apad.w_self, off,
+                                                  n_local, 0)
+            def one(leaf):
+                flat = leaf.reshape(n_local, -1).astype(jnp.float32)
+                part = jnp.einsum("nk,nkd->nd", local_w, flat[lidx],
+                                  precision=jax.lax.Precision.HIGHEST)
+                own = jax.lax.psum_scatter(part, axes,
+                                           scatter_dimension=0, tiled=True)
+                own = own + ws_own[:, None] * flat
+                return own.reshape(leaf.shape).astype(leaf.dtype)
+            return jax.tree_util.tree_map(one, local)
+
+        def round_body_sharded_sparse(carry, xs):
+            # Per-device sparse body: gstate and the CSR round output stay
+            # replicated at logical n; only the params move, and only to
+            # the extent the schedule needs them.
+            params, opt_state, gstate, sim, netstate = carry
+            rnd, batch = xs
+            params, opt_state = local_step(params, opt_state, batch)
+            off = shard_index() * n_local
+            full = gather_full(params) if collective == "gather" else None
+            if not needs_params:
+                ctrl = None
+            elif collective == "gather":
+                ctrl = jax.tree_util.tree_map(lambda x: x[:n], full)
+            else:
+                # psum mode has no standing gather; pull the population
+                # in only on negotiation rounds (the replicated predicate
+                # keeps the collective well-formed, exactly like
+                # psum_mode_refresh above).
+                def ctrl_gather(p):
+                    return jax.tree_util.tree_map(
+                        lambda x: jax.lax.all_gather(
+                            x, axes, axis=0, tiled=True)[:n], p)
+                def ctrl_hold(p):
+                    return jax.tree_util.tree_map(
+                        lambda x: jnp.zeros((n,) + x.shape[1:], x.dtype),
+                        p)
+                ctrl = jax.lax.cond(rnd % ctrl_every == 0, ctrl_gather,
+                                    ctrl_hold, params)
+            gstate, adj = strategy.graph_round(gstate, rnd, ctrl)
+            apad = pad_adjacency(adj, n_pad)
+            if collective == "gather":
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(
+                    a, off, n_local, 0)
+                adj_l = SparseAdjacency(sl(apad.idx), sl(apad.w),
+                                        sl(apad.w_self), sl(apad.mask))
+                rows = off + jnp.arange(n_local, dtype=jnp.int32)
+                params = _sparse_mix(adj_l, full, rows=rows)
+            else:
+                params = sparse_mix_psum(apad, params, off)
+            return (params, opt_state, gstate, sim, netstate), \
+                (adj.idx, adj.mask)
+
+        if sparse_native:
+            body = round_body_sharded_sparse if sharded \
+                else round_body_sparse
+        else:
+            body = round_body_sharded if sharded else round_body
 
         if stream is None:
             def superstep(carry, rnds, batches):
@@ -584,7 +748,11 @@ class CompiledSuperstep:
                 jax.tree_util.tree_map(lambda _: P(), self.gstate),
                 P(),
                 net_specs)
-            self._ys_specs = P() if net is None else (P(), P(), P(), P())
+            if sparse_native:
+                self._ys_specs = (P(), P())   # (idx, mask), replicated
+            else:
+                self._ys_specs = P() if net is None \
+                    else (P(), P(), P(), P())
             if stream is None:
                 # batch stacks are [K, n_pad, b, ...]: node axis = dim 1.
                 self._batch_spec = P(None, self._nspec)
@@ -721,6 +889,24 @@ class CompiledSuperstep:
          self._netstate) = carry
         if hasattr(self.strategy, "set_graph_state"):
             self.strategy.set_graph_state(self.gstate, self.sim)
+        if self.sparse_native:
+            # CSR scan output: [K, n, k] sender indices + validity mask.
+            idx_np = np.asarray(ys[0], np.int32)
+            mask_np = np.asarray(ys[1], bool)
+            self._comm_bytes += int(mask_np.sum()) * self._model_bytes
+            self._last_isolated = int((~mask_np[-1].any(axis=1)).sum())
+            nn = self.cfg.n_nodes
+            if nn > SPARSE_EDGE_DECODE_MAX:
+                # Paper-scale n: never materialize [n, n] on the host —
+                # edge_history carries the compact (idx, mask) pairs.
+                self.edge_history.extend(
+                    (idx_np[t], mask_np[t]) for t in range(len(idx_np)))
+                return mask_np
+            dense = np.zeros((idx_np.shape[0], nn, nn), bool)
+            t_i, r_i, s_i = np.nonzero(mask_np)
+            dense[t_i, r_i, idx_np[t_i, r_i, s_i]] = True
+            self.edge_history.extend(dense)
+            return dense
         if self.net is None:
             edges_np = np.asarray(ys, bool)
             self.edge_history.extend(edges_np)
@@ -756,7 +942,7 @@ class CompiledSuperstep:
         inter-node variance, cumulative comm bytes, isolation count)."""
         losses, metrics = self._evaluate(self.params, self.test_batch)
         rec = make_round_record(rnd, losses, metrics, self._comm_bytes,
-                                edges)
+                                edges, isolated=self._last_isolated)
         self.log.add(rec)
         return rec
 

@@ -70,6 +70,18 @@ class RunnerConfig:
     # all-gathered population; bitwise-matches the single-device engine),
     # "psum" (partial-products reduce; f32-rounding-close), or "auto".
     collective: str = "gather"
+    # Engine data/control plane: "dense" (the original O(n²) path),
+    # "sparse" (CSR k-sparse mixing + gossiped discovery, DESIGN.md
+    # §11), or "auto" (resolved through the repro.tune cache like the
+    # other knobs).  Sparse-native strategies
+    # (repro.sparse.SparseMorphStrategy / SparseEpidemicStrategy)
+    # require "sparse" (or "auto", which then resolves to it).
+    engine: str = "dense"
+    # Compat-mode numerics when a dense-returning strategy runs under
+    # engine="sparse": "exact" (identical dense contraction — bitwise vs
+    # the dense engine) or "gather" (in-scan CSR conversion + sparse
+    # gather mix — parity to tolerance).
+    sparse_mix: str = "exact"
     # Dense in-scan network model (repro.netsim.DenseNetwork): price
     # latency/staleness/drops/churn inside the fused superstep
     # (DESIGN.md §9).  None = idealized lockstep network.  Requires the
@@ -115,10 +127,17 @@ def net_staleness_mean(net_stats) -> float:
 
 
 def make_round_record(rnd: int, losses, metrics, comm_bytes: int,
-                      edges: np.ndarray) -> RoundRecord:
+                      edges: np.ndarray,
+                      isolated: Optional[int] = None) -> RoundRecord:
     """§IV-A4 metrics for one evaluation point — the single constructor
     both the host loop and the compiled engine decode into, so their
-    logs cannot drift apart field by field."""
+    logs cannot drift apart field by field.
+
+    ``isolated`` overrides the dense-edge count: the sparse engine
+    already knows the in-degree-0 rows from the CSR mask and, at
+    paper-scale n, never materializes an ``[n, n]`` matrix to count
+    from.  ``None`` (every dense path) counts from ``edges``.
+    """
     acc = np.asarray(metrics["accuracy"])
     return RoundRecord(
         rnd=rnd,
@@ -126,7 +145,8 @@ def make_round_record(rnd: int, losses, metrics, comm_bytes: int,
         mean_loss=float(np.asarray(losses).mean()),
         internode_variance=internode_variance(acc),
         comm_bytes=comm_bytes,
-        isolated=len(isolated_nodes(edges)),
+        isolated=isolated if isolated is not None
+        else len(isolated_nodes(edges)),
         per_node_accuracy=acc,
     )
 
@@ -213,10 +233,18 @@ class DecentralizedRunner:
         (DESIGN.md §10).
         """
         from ..launch.mesh import make_superstep_mesh
-        from ..tune import resolve_knobs
+        from ..tune import AUTO, resolve_knobs
         from .compiled import CompiledSuperstep
         knobs = resolve_knobs(self.cfg, self.params)
         self.resolved_knobs = knobs
+        engine = knobs.engine
+        if self.cfg.engine == AUTO and getattr(self.strategy, "sparse",
+                                               False):
+            # A sparse-native strategy determines the data plane; an
+            # "auto" resolution (or a stale dense cache entry) must not
+            # steer it onto the dense path.  An explicit engine="dense"
+            # still raises the documented TypeError in the engine.
+            engine = "sparse"
         mesh = None
         if self.cfg.mesh_devices is not None:
             mesh = make_superstep_mesh(self.cfg.mesh_devices or None)
@@ -230,7 +258,8 @@ class DecentralizedRunner:
             cfg=self.cfg, use_pallas=self.cfg.use_pallas,
             interpret=self.cfg.interpret, block_d=knobs.block_d,
             mesh=mesh, collective=knobs.collective, net=self.cfg.net,
-            chunk=knobs.chunk,
+            chunk=knobs.chunk, engine=engine,
+            sparse_mix=self.cfg.sparse_mix,
             params=self.params, opt_state=self.opt_state)
 
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
@@ -255,6 +284,11 @@ class DecentralizedRunner:
             self._comm_bytes = engine._comm_bytes
             self.log = log
             return log
+        if getattr(self.strategy, "sparse", False):
+            raise TypeError(
+                "sparse-native strategies (CSR graph_round) only run "
+                "inside the compiled superstep engine — leave "
+                "cfg.compiled unset (auto) or set it True")
         if self.cfg.net is not None:
             raise TypeError(
                 "RunnerConfig.net (the dense in-scan network model) "

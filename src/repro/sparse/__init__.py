@@ -1,0 +1,28 @@
+"""Sparse superstep subsystem (DESIGN.md §11): CSR-style k-sparse
+adjacency state, O(n·k·D) gather mixing, and gossiped candidate-set peer
+discovery — the engine path selected by ``RunnerConfig.engine="sparse"``
+that breaks the dense engine's O(n²) wall."""
+from .adjacency import (SparseAdjacency, dense_to_csr, pad_adjacency,
+                        renormalize_drops, to_dense, uniform_csr_weights,
+                        validate, validate_against_dense)
+from .discovery import (SparseEpidemicStrategy, SparseMorphStrategy,
+                        full_candidates, gossip_candidates)
+from .mix import candidate_similarity, sparse_mix_pytree, sparse_mix_rows
+
+__all__ = [
+    "SparseAdjacency",
+    "SparseEpidemicStrategy",
+    "SparseMorphStrategy",
+    "candidate_similarity",
+    "dense_to_csr",
+    "full_candidates",
+    "gossip_candidates",
+    "pad_adjacency",
+    "renormalize_drops",
+    "sparse_mix_pytree",
+    "sparse_mix_rows",
+    "to_dense",
+    "uniform_csr_weights",
+    "validate",
+    "validate_against_dense",
+]

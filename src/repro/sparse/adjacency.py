@@ -1,0 +1,198 @@
+"""CSR-style k-sparse adjacency state (DESIGN.md §11).
+
+The dense engine represents one round's topology as an ``[n, n]`` bool
+in-edge matrix plus a row-stochastic ``[n, n]`` weight matrix.  Under
+Morph's fixed in-degree k ≪ n that is O(n²) storage and O(n²·D) mixing
+flops for O(n·k) information.  :class:`SparseAdjacency` is the compact
+twin carried through the sparse superstep scan:
+
+  ``idx    [n, k] int32`` — sender (column) index per slot; invalid
+                            slots point at the receiver's own row so
+                            every gather stays in bounds;
+  ``w      [n, k] f32``   — per-slot mixing weight (0 when invalid);
+  ``w_self [n]    f32``   — the diagonal weight;
+  ``mask   [n, k] bool``  — slot validity (in-degree = ``mask.sum(1)``).
+
+Orientation follows the repo's edge convention: slot ``(i, s)`` is the
+edge ``idx[i, s] -> i`` (receiver row, sender column), matching
+``edges[i, j]`` = "j sends to i".
+
+Conversions against the dense representation are exact whenever the
+dense in-degree fits the slot count — :func:`dense_to_csr` /
+:func:`to_dense` round-trip losslessly (property-pinned in
+tests/test_sparse_adjacency.py), and :func:`uniform_csr_weights`
+reproduces :func:`repro.core.mixing.uniform_weights_jax` bit for bit
+(same ``1 / (deg + 1)`` f32 division per entry).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SparseAdjacency(NamedTuple):
+    """One round's k-sparse topology + row-stochastic weights."""
+    idx: jax.Array       # [n, k] int32, sender index per slot
+    w: jax.Array         # [n, k] f32, slot weight (0 when invalid)
+    w_self: jax.Array    # [n] f32, diagonal weight
+    mask: jax.Array      # [n, k] bool, slot validity
+
+    @property
+    def n(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.idx.shape[1]
+
+    def in_degree(self) -> jax.Array:
+        """Per-receiver in-degree, ``[n]`` int32."""
+        return self.mask.sum(axis=1).astype(jnp.int32)
+
+
+def uniform_csr_weights(idx: jax.Array, mask: jax.Array) -> SparseAdjacency:
+    """Uniform Alg.-2 weights ``1 / (deg + 1)`` over the valid slots —
+    entry for entry the same f32 division
+    :func:`repro.core.mixing.uniform_weights_jax` performs, so a sparse
+    mix through the dense contraction is bitwise the dense uniform mix."""
+    idx = idx.astype(jnp.int32)
+    mask = mask.astype(bool)
+    deg = mask.sum(axis=1)
+    inv = 1.0 / (deg + 1).astype(jnp.float32)
+    w = jnp.where(mask, inv[:, None], 0.0)
+    rows = jnp.arange(idx.shape[0], dtype=jnp.int32)[:, None]
+    idx = jnp.where(mask, idx, rows)
+    return SparseAdjacency(idx=idx, w=w, w_self=inv, mask=mask)
+
+
+def dense_to_csr(edges: jax.Array, w: Optional[jax.Array],
+                 k: int) -> SparseAdjacency:
+    """Compress a dense ``[n, n]`` topology into ``k`` CSR slots
+    (jit-safe; usable inside the scan body).
+
+    Slots fill with the row's in-edges in ascending sender order; rows
+    with in-degree < ``k`` leave trailing slots invalid.  Rows with
+    in-degree > ``k`` silently drop the highest-index senders — use
+    :func:`validate_against_dense` (host) when exactness matters.
+    ``w=None`` derives uniform ``1 / (deg + 1)`` weights from the kept
+    slots; otherwise ``w``'s entries (and diagonal) are gathered.
+    """
+    edges = edges.astype(bool)
+    n = edges.shape[0]
+    k = min(k, n)
+    # Score True entries above every False one, each group ordered by
+    # ascending sender index, so top_k fills slots deterministically.
+    j = jnp.arange(n, dtype=jnp.int32)
+    scores = jnp.where(edges, 2 * n - j, n - j)
+    _, idx = jax.lax.top_k(scores, k)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    mask = edges[rows, idx]
+    idx = jnp.where(mask, idx, rows).astype(jnp.int32)
+    if w is None:
+        return uniform_csr_weights(idx, mask)
+    w = w.astype(jnp.float32)
+    wk = jnp.where(mask, w[rows, idx], 0.0)
+    return SparseAdjacency(idx=idx, w=wk, w_self=jnp.diag(w), mask=mask)
+
+
+def to_dense(adj: SparseAdjacency):
+    """Expand back to the dense pair ``(edges [n, n] bool, w [n, n]
+    f32)``.  Exact inverse of :func:`dense_to_csr` whenever no row
+    overflowed its slots (the valid slots of one row name distinct
+    senders, so the scatter never collides)."""
+    n = adj.n
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    edges = jnp.zeros((n, n), bool).at[rows, adj.idx].max(adj.mask)
+    w = jnp.zeros((n, n), jnp.float32)
+    w = w.at[rows, adj.idx].add(jnp.where(adj.mask, adj.w, 0.0))
+    w = w.at[jnp.arange(n), jnp.arange(n)].add(adj.w_self)
+    return edges, w
+
+
+def pad_adjacency(adj: SparseAdjacency, n_pad: int) -> SparseAdjacency:
+    """Grow the receiver axis to ``n_pad`` (sharded mode): padded rows
+    have no in-edges and keep their own model (``w_self = 1``), matching
+    the dense engine's identity-tail ``embed_w``."""
+    pad = n_pad - adj.n
+    if pad <= 0:
+        return adj
+    k = adj.k
+    tail = jnp.arange(adj.n, n_pad, dtype=jnp.int32)
+    return SparseAdjacency(
+        idx=jnp.concatenate(
+            [adj.idx, jnp.broadcast_to(tail[:, None], (pad, k))]),
+        w=jnp.concatenate([adj.w, jnp.zeros((pad, k), jnp.float32)]),
+        w_self=jnp.concatenate(
+            [adj.w_self, jnp.ones((pad,), jnp.float32)]),
+        mask=jnp.concatenate([adj.mask, jnp.zeros((pad, k), bool)]))
+
+
+def renormalize_drops(adj: SparseAdjacency,
+                      drop: jax.Array) -> SparseAdjacency:
+    """Loss-renormalization (Alg. 2 l. 12 semantics): slots whose model
+    transfer the network dropped fold their weight back into the
+    receiver's self-weight, keeping every row's total mass — the same
+    rule the dense network path applies edge-wise."""
+    drop = drop.astype(bool) & adj.mask
+    lost = jnp.where(drop, adj.w, 0.0).sum(axis=1)
+    mask = adj.mask & ~drop
+    rows = jnp.arange(adj.n, dtype=jnp.int32)[:, None]
+    return SparseAdjacency(
+        idx=jnp.where(mask, adj.idx, rows).astype(jnp.int32),
+        w=jnp.where(mask, adj.w, 0.0),
+        w_self=adj.w_self + lost,
+        mask=mask)
+
+
+def validate(adj: SparseAdjacency, atol: float = 1e-6) -> None:
+    """Host-side structural checks; raises ``ValueError`` on the first
+    violation.  Checks: index bounds, per-row sender uniqueness over the
+    valid slots, invalid slots parked on the diagonal with zero weight,
+    row-stochastic total mass."""
+    idx = np.asarray(adj.idx)
+    w = np.asarray(adj.w, np.float64)
+    w_self = np.asarray(adj.w_self, np.float64)
+    mask = np.asarray(adj.mask, bool)
+    n, k = idx.shape
+    if idx.min(initial=0) < 0 or idx.max(initial=0) >= n:
+        raise ValueError(f"sender index out of range [0, {n})")
+    rows = np.arange(n)[:, None]
+    if (idx[~mask] != np.broadcast_to(rows, idx.shape)[~mask]).any():
+        raise ValueError("invalid slots must point at their own row")
+    if (w[~mask] != 0.0).any():
+        raise ValueError("invalid slots must carry zero weight")
+    if ((idx == rows) & mask).any():
+        raise ValueError("valid slots must not name the receiver itself")
+    for i in range(n):
+        senders = idx[i][mask[i]]
+        if len(np.unique(senders)) != len(senders):
+            raise ValueError(f"row {i} names a sender twice")
+    total = w.sum(axis=1) + w_self
+    if not np.allclose(total, 1.0, atol=atol):
+        bad = int(np.argmax(np.abs(total - 1.0)))
+        raise ValueError(
+            f"row {bad} weight mass {total[bad]:.8f} != 1")
+
+
+def validate_against_dense(adj: SparseAdjacency, edges, w=None,
+                           atol: float = 1e-6) -> None:
+    """Host-side conformance check against a dense ``(edges, w)`` pair:
+    the CSR must reproduce it exactly — in particular every row's dense
+    in-degree must have fit the slot count (lossless round-trip)."""
+    validate(adj, atol=atol)
+    edges = np.asarray(edges, bool)
+    deg = edges.sum(axis=1)
+    if deg.max(initial=0) > adj.k:
+        bad = int(np.argmax(deg))
+        raise ValueError(
+            f"row {bad} has in-degree {int(deg[bad])} > {adj.k} slots; "
+            "the CSR conversion dropped edges")
+    got_e, got_w = to_dense(adj)
+    if not np.array_equal(np.asarray(got_e), edges):
+        raise ValueError("CSR edges do not reproduce the dense topology")
+    if w is not None and not np.allclose(
+            np.asarray(got_w), np.asarray(w, np.float32), atol=atol):
+        raise ValueError("CSR weights do not reproduce the dense W")

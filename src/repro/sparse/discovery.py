@@ -1,0 +1,219 @@
+"""Approximate peer discovery: gossiped candidate sets (DESIGN.md §11).
+
+Morph's negotiation needs, for every node, similarity estimates against
+peers it might adopt — the dense controller keeps an ``[n, n]`` estimate
+matrix and runs Eq.-4 transitive propagation (O(n³)).  At paper-scale n
+that is the wall.  The sparse control plane replaces "every pair" with a
+**gossiped candidate set** of size c = O(k) per node:
+
+  candidates(i) = current neighbors            (k slots, kept distinct)
+                ∪ neighbors-of-neighbors       (gossip sample)
+                ∪ uniform random peers         (exploration, Alg. 3's R)
+
+Gossip and exploration draws are **counter-keyed** exactly like the
+netsim randomness (``fold_in(round_key(seed, rnd), STREAM_*)``, see
+``repro.netsim.sampling``): a draw depends only on ``(seed, round,
+node)``, never carried state, so the candidate sequence is invariant to
+chunking and sharding.
+
+Similarity is then Eq.-3 evaluated against candidates only
+(:func:`repro.sparse.mix.candidate_similarity`, O(n·c·D)) and selection
+is the same Gumbel-top-k diversity sampler the dense controller uses
+(:func:`repro.core.selection.sample_gumbel_topk`), applied receiver-side
+per row.  There is no college-admission matching pass: out-degree is
+balanced only in expectation (senders are drawn near-uniformly at
+random), which is the standard relaxation gossip protocols make — the
+in-degree stays *exactly* k by construction, because the k current
+neighbors are always valid candidates and selection keeps the top k.
+
+Strategies here implement the in-graph contract's **sparse variant**:
+``sparse = True`` and ``graph_round(gstate, rnd, params) -> (gstate,
+SparseAdjacency)`` — the engine passes node-stacked params (the sparse
+control plane needs models, not a dense sim cache) and receives CSR
+adjacency instead of ``(edges, w)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.selection import sample_gumbel_topk
+from ..netsim.sampling import round_key
+from .adjacency import SparseAdjacency, uniform_csr_weights
+from .mix import candidate_similarity
+
+# Candidate-sampling sub-streams, continuing the netsim numbering
+# (STREAM_JITTER=0, STREAM_DROP_MODEL=1, STREAM_DROP_CTRL=2).
+STREAM_CAND_GOSSIP = 3
+STREAM_CAND_RANDOM = 4
+STREAM_CAND_SELECT = 5
+
+
+def _ring_bootstrap(n: int, k: int) -> np.ndarray:
+    """Deterministic connected bootstrap: node i's in-neighbors are the
+    next k nodes around the ring — k distinct non-self senders."""
+    base = np.arange(n)[:, None] + np.arange(1, k + 1)[None, :]
+    return (base % n).astype(np.int32)
+
+
+def gossip_candidates(seed: int, rnd, idx: jax.Array, c: int):
+    """``[n, c]`` candidate senders for every receiver plus a ``[n, c]``
+    validity mask (duplicates and self masked out).
+
+    Slots 0..k-1 are the current neighbors verbatim (distinct non-self
+    by the strategies' invariant, so every row always has ≥ k valid
+    candidates); half the remainder samples neighbors-of-neighbors
+    through ``idx`` (gossip), the rest uniform random peers.
+    """
+    n, k = idx.shape
+    if c <= k:
+        raise ValueError(f"candidate set c={c} must exceed k={k}")
+    n_extra = c - k
+    n_gossip = n_extra // 2
+    n_rand = n_extra - n_gossip
+    key = round_key(seed, rnd)
+    kg = jax.random.fold_in(key, STREAM_CAND_GOSSIP)
+    kr = jax.random.fold_in(key, STREAM_CAND_RANDOM)
+    parts = [idx]
+    if n_gossip:
+        nn = idx[idx].reshape(n, k * k)           # neighbors-of-neighbors
+        pick = jax.random.randint(kg, (n, n_gossip), 0, k * k)
+        parts.append(jnp.take_along_axis(nn, pick, axis=1))
+    parts.append(jax.random.randint(kr, (n, n_rand), 0, n,
+                                    dtype=jnp.int32))
+    cand = jnp.concatenate(parts, axis=1).astype(jnp.int32)
+    # Mask self-loops and any candidate already named in an earlier slot.
+    dup = (cand[:, :, None] == cand[:, None, :]) \
+        & (jnp.arange(c)[None, :, None] > jnp.arange(c)[None, None, :])
+    valid = ~dup.any(axis=2) & (cand != jnp.arange(n)[:, None])
+    return cand, valid
+
+
+def full_candidates(n: int):
+    """The degenerate candidate set = the whole population (used by the
+    conformance tests: discovery with c = n sees every peer, like the
+    dense controller's all-pairs similarity)."""
+    cand = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
+                            (n, n))
+    valid = ~jnp.eye(n, dtype=bool)
+    return cand, valid
+
+
+def _select_topk(key, logits_sim, valid, cand, k: int, beta: float):
+    """Receiver-side Gumbel-top-k over the candidate axis; returns the
+    chosen ``[n, k]`` sender indices.  Every row has ≥ k valid
+    candidates, so the selection always fills all k slots."""
+    n = cand.shape[0]
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        key, jnp.arange(n, dtype=jnp.uint32))
+    slots, ok = jax.vmap(
+        lambda kk, s, m: sample_gumbel_topk(kk, s, m, k, beta))(
+        keys, logits_sim, valid)
+    del ok      # ≥ k valid candidates per row by construction
+    return jnp.take_along_axis(cand, slots, axis=1).astype(jnp.int32)
+
+
+class SparseMorphStrategy:
+    """Morph with gossiped candidate discovery — the sparse-native
+    control plane (in-graph contract, ``sparse = True`` variant).
+
+    Every ``delta_r`` rounds each node draws its candidate set, computes
+    Eq.-3 similarity against those c peers only, and Gumbel-top-k
+    samples k diverse senders (Eq. 5); between negotiations the topology
+    is held.  State is the ``[n, k]`` neighbor index array — O(n·k)
+    where the dense controller carries O(n²).
+
+    ``candidates=None`` defaults to ``min(n, 4k + 2)``; passing
+    ``candidates >= n`` switches to the full-population candidate set
+    (exact discovery, used by conformance tests).
+    """
+
+    in_graph = True
+    sparse = True
+    needs_sim = False
+    needs_params = True
+    uniform_mixing = True
+    name = "sparse-morph"
+
+    def __init__(self, n: int, k: int, candidates: int = None,
+                 beta: float = 5.0, delta_r: int = 5, seed: int = 0):
+        if k >= n:
+            raise ValueError(f"k={k} must be < n={n}")
+        self.n, self.k = n, k
+        self.c = min(n, candidates if candidates is not None
+                     else 4 * k + 2)
+        self.beta = beta
+        self.delta_r = delta_r
+        self.seed = seed
+        self.idx = jnp.asarray(_ring_bootstrap(n, k))
+
+    def init_graph_state(self):
+        return self.idx
+
+    def graph_round(self, gstate, rnd, params):
+        idx = gstate
+
+        def negotiate(idx):
+            if self.c >= self.n:
+                cand, valid = full_candidates(self.n)
+            else:
+                cand, valid = gossip_candidates(self.seed, rnd, idx,
+                                                self.c)
+            sim = candidate_similarity(params, cand)
+            key = jax.random.fold_in(round_key(self.seed, rnd),
+                                     STREAM_CAND_SELECT)
+            return _select_topk(key, sim, valid, cand, self.k, self.beta)
+
+        idx = jax.lax.cond(rnd % self.delta_r == 0, negotiate,
+                           lambda i: i, idx)
+        adj = uniform_csr_weights(idx, jnp.ones_like(idx, dtype=bool))
+        return idx, adj
+
+    def set_graph_state(self, gstate, sim=None):
+        self.idx = gstate
+
+
+class SparseEpidemicStrategy:
+    """Epidemic Learning's round-random k-regular-in topology in CSR
+    form: every round each receiver samples k distinct random senders
+    (ring candidates guarantee the floor, random candidates plus pure
+    Gumbel scores do the shuffling).  Stateless — the draw is a pure
+    function of ``(seed, round)`` — and parameter-free, which makes it
+    the cleanest workload for measuring the engine's O(n·k·D) data
+    plane (no similarity traffic at all)."""
+
+    in_graph = True
+    sparse = True
+    needs_sim = False
+    needs_params = False
+    uniform_mixing = True
+    name = "sparse-epidemic"
+
+    def __init__(self, n: int, k: int, candidates: int = None,
+                 seed: int = 0):
+        if k >= n:
+            raise ValueError(f"k={k} must be < n={n}")
+        self.n, self.k = n, k
+        self.c = min(n, candidates if candidates is not None
+                     else 4 * k + 2)
+        self.seed = seed
+        self._ring = jnp.asarray(_ring_bootstrap(n, k))
+
+    def init_graph_state(self):
+        return ()
+
+    def graph_round(self, gstate, rnd, params=None):
+        if self.c >= self.n:
+            cand, valid = full_candidates(self.n)
+        else:
+            cand, valid = gossip_candidates(self.seed, rnd, self._ring,
+                                            self.c)
+        key = jax.random.fold_in(round_key(self.seed, rnd),
+                                 STREAM_CAND_SELECT)
+        # beta=0 on constant sim: pure Gumbel noise = uniform sampling
+        # without replacement over the valid candidates.
+        idx = _select_topk(key, jnp.zeros(cand.shape, jnp.float32),
+                           valid, cand, self.k, 0.0)
+        adj = uniform_csr_weights(idx, jnp.ones_like(idx, dtype=bool))
+        return gstate, adj

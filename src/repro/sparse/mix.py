@@ -1,0 +1,100 @@
+"""k-sparse mixing and candidate-set similarity (DESIGN.md §11).
+
+The dense engine mixes with a row-stochastic ``[n, n]`` contraction —
+O(n²·D) flops for k ≪ n useful terms per row.  :func:`sparse_mix_pytree`
+does the O(n·k·D) version: gather each receiver's k neighbor rows by
+index and reduce the weighted sum over the slot axis (a segment-sum
+with a fixed k slots per receiver), plus the diagonal term.
+
+All accumulation is f32/HIGHEST like :func:`repro.core.apply_mixing`,
+but the *reduction order* differs from a dense tensordot (k gathered
+terms vs n mostly-zero terms), so sparse-mix trajectories are
+allclose-to — not bitwise — the dense engine.  The engine's
+``sparse_mix="exact"`` compat mode keeps the dense contraction for
+bitwise conformance runs; this module is the scaling path.
+
+:func:`candidate_similarity` is the Eq.-3 cosine computed only against a
+``[n, c]`` candidate set (c = O(k)) instead of all pairs: per-layer
+cosines averaged over layers exactly like
+:func:`repro.core.similarity.pairwise_model_similarity`, at O(n·c·D).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .adjacency import SparseAdjacency
+
+_EPS = 1e-12    # matches core.similarity / kernels.ops
+
+
+def _flatten_leaf(leaf: jax.Array) -> jax.Array:
+    """``[n, ...] -> [n, D]`` (a no-op reshape for flat leaves)."""
+    return leaf.reshape(leaf.shape[0], -1)
+
+
+def sparse_mix_rows(adj: SparseAdjacency, x: jax.Array,
+                    rows: Optional[jax.Array] = None) -> jax.Array:
+    """Mix one flat ``[n_src, D]`` leaf for the receivers named by
+    ``adj``'s rows: ``out[i] = w_self[i] * x[rows[i]] + Σ_s w[i, s] *
+    x[idx[i, s]]``.
+
+    ``rows=None`` means receiver i *is* source row i (single-device
+    layout).  In sharded mode ``adj`` holds the device's receiver-row
+    block while ``x`` is the gathered population, and ``rows`` the
+    receivers' global indices — the per-row arithmetic is identical, so
+    the sharded gather schedule matches single-device bit for bit.
+    """
+    xf = x.astype(jnp.float32)
+    own = xf if rows is None else xf[rows]
+    gathered = xf[adj.idx]                              # [m, k, D]
+    wm = jnp.where(adj.mask, adj.w, 0.0)
+    acc = jnp.einsum("mk,mkd->md", wm, gathered,
+                     precision=jax.lax.Precision.HIGHEST)
+    acc = acc + adj.w_self[:, None] * own
+    return acc.astype(x.dtype)
+
+
+def sparse_mix_pytree(adj: SparseAdjacency, tree,
+                      rows: Optional[jax.Array] = None,
+                      mix_flat=None):
+    """Apply :func:`sparse_mix_rows` leaf-wise over a node-stacked
+    pytree (each leaf ``[n_src, ...]``), preserving leaf shapes and
+    dtypes.  ``mix_flat`` overrides the flat-leaf mixer — the engine
+    passes the Pallas ``graph_mix_sparse`` kernel here."""
+    fn = mix_flat or sparse_mix_rows
+
+    def one(leaf):
+        out = fn(adj, _flatten_leaf(leaf), rows)
+        return out.reshape(leaf.shape[: 1] + leaf.shape[1:]) \
+            if rows is None else out.reshape((out.shape[0],)
+                                             + leaf.shape[1:])
+    return jax.tree_util.tree_map(one, tree)
+
+
+def candidate_similarity(tree, cand: jax.Array) -> jax.Array:
+    """Eq.-3 cosine similarity of every node against its ``[n, c]``
+    candidate peers only: per-layer cosines averaged over layers (the
+    same per-leaf structure as ``pairwise_model_similarity``), O(n·c·D)
+    instead of the all-pairs O(n²·D).
+
+    Returns ``[n, c]`` f32; entry ``(i, a)`` compares node i with node
+    ``cand[i, a]``.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        raise ValueError("empty parameter pytree")
+    total = None
+    for leaf in leaves:
+        flat = _flatten_leaf(leaf).astype(jnp.float32)
+        cv = flat[cand]                                   # [n, c, D]
+        dots = jnp.einsum("nd,ncd->nc", flat, cv,
+                          precision=jax.lax.Precision.HIGHEST)
+        own = jnp.sqrt((flat * flat).sum(axis=1))         # [n]
+        peer = jnp.sqrt(jnp.einsum("ncd,ncd->nc", cv, cv,
+                                   precision=jax.lax.Precision.HIGHEST))
+        cos = dots / (own[:, None] * peer + _EPS)
+        total = cos if total is None else total + cos
+    return total / len(leaves)

@@ -11,7 +11,8 @@ from .cache import (CACHE_VERSION, DEFAULT_CACHE_PATH, ENV_CACHE,
                     TuneEntry, TuneShape, TuningCache,
                     load_default_cache)
 from .resolve import AUTO, ResolvedKnobs, resolve_knobs, shape_of
-from .space import (DEFAULT_BLOCK_DS, DEFAULT_CHUNKS, Candidate,
+from .space import (DEFAULT_BLOCK_DS, DEFAULT_CHUNKS,
+                    DEFAULT_SPARSE_CANDIDATES, Candidate,
                     candidate_space)
 from .tuner import (PEAKS, TuneResult, prune, stage1_score, time_engine,
                     tune, tune_into)
@@ -20,7 +21,8 @@ from .workload import mlp_runner_factory
 __all__ = ["CACHE_VERSION", "DEFAULT_CACHE_PATH", "ENV_CACHE",
            "TuneEntry", "TuneShape", "TuningCache", "load_default_cache",
            "AUTO", "ResolvedKnobs", "resolve_knobs", "shape_of",
-           "DEFAULT_BLOCK_DS", "DEFAULT_CHUNKS", "Candidate",
+           "DEFAULT_BLOCK_DS", "DEFAULT_CHUNKS",
+           "DEFAULT_SPARSE_CANDIDATES", "Candidate",
            "candidate_space",
            "PEAKS", "TuneResult", "prune", "stage1_score", "time_engine",
            "tune", "tune_into", "mlp_runner_factory"]

@@ -56,6 +56,10 @@ class TuneEntry:
     use_pallas: bool = False             # winning kernel path (recorded;
                                          # resolution never flips the
                                          # user's use_pallas setting)
+    engine: str = "dense"                # data plane: dense | sparse
+    candidates: Optional[int] = None     # sparse candidate-set size
+                                         # (recorded; a strategy knob,
+                                         # not an engine argument)
     seconds_per_round: Optional[float] = None   # stage-2 measurement
     tuned: Dict[str, object] = field(default_factory=dict)  # provenance
                                          # (jax version, candidate count)

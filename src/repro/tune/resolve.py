@@ -26,6 +26,7 @@ class ResolvedKnobs:
     collective: str
     chunk: Optional[int]
     source: str
+    engine: str = "dense"
 
 
 def shape_of(cfg, params) -> TuneShape:
@@ -59,12 +60,14 @@ def resolve_knobs(cfg, params,
     has no entry — so enabling ``"auto"`` can never make an untuned
     shape slower than before.
     """
+    engine = getattr(cfg, "engine", "dense")
     autos = (cfg.block_d == AUTO, cfg.collective == AUTO,
-             cfg.chunk == AUTO)
+             cfg.chunk == AUTO, engine == AUTO)
     if not any(autos):
         return ResolvedKnobs(block_d=cfg.block_d,
                              collective=cfg.collective,
-                             chunk=cfg.chunk, source="explicit")
+                             chunk=cfg.chunk, source="explicit",
+                             engine=engine)
     shape = shape_of(cfg, params)
     if cache is None:
         cache = load_default_cache()
@@ -76,4 +79,5 @@ def resolve_knobs(cfg, params,
         block_d=e.block_d if autos[0] else cfg.block_d,
         collective=e.collective if autos[1] else cfg.collective,
         chunk=e.chunk if autos[2] else cfg.chunk,
-        source=source)
+        source=source,
+        engine=e.engine if autos[3] else engine)

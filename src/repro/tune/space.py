@@ -23,20 +23,31 @@ from .cache import TuneShape
 
 DEFAULT_CHUNKS = (8, 16, 32, 64)
 DEFAULT_BLOCK_DS = (128, 256, 512)
+# Candidate-set sizes for sparse-engine candidates (None = the
+# strategy's own default, min(n, 4k + 2)).
+DEFAULT_SPARSE_CANDIDATES = (None, 16)
 
 
 @dataclass(frozen=True)
 class Candidate:
     """One knob assignment the tuner lowers (stage 1) and may time
-    (stage 2).  Field meanings match ``RunnerConfig``."""
+    (stage 2).  Field meanings match ``RunnerConfig``; ``engine`` picks
+    the dense or sparse data plane (DESIGN.md §11) and ``candidates``
+    is the sparse control plane's gossiped candidate-set size (a
+    strategy knob, threaded through the workload factory)."""
     chunk: int = 32
     collective: str = "gather"
     block_d: Optional[int] = None
     use_pallas: bool = False
+    engine: str = "dense"
+    candidates: Optional[int] = None
 
     def label(self) -> str:
         """Short human-readable tag for logs and cache provenance."""
         parts = [f"chunk={self.chunk}", self.collective]
+        if self.engine != "dense":
+            c = "strategy" if self.candidates is None else self.candidates
+            parts.append(f"{self.engine}(c={c})")
         if self.use_pallas:
             parts.append(f"pallas(block_d={self.block_d})")
         return "/".join(parts)
@@ -45,10 +56,18 @@ class Candidate:
 def candidate_space(shape: TuneShape, *,
                     chunks: Sequence[int] = DEFAULT_CHUNKS,
                     block_ds: Sequence[int] = DEFAULT_BLOCK_DS,
-                    include_pallas: Optional[bool] = None
-                    ) -> List[Candidate]:
+                    include_pallas: Optional[bool] = None,
+                    include_sparse: bool = True,
+                    sparse_candidates: Sequence[Optional[int]]
+                    = DEFAULT_SPARSE_CANDIDATES) -> List[Candidate]:
     """Deterministically ordered candidates for ``shape`` (see module
-    docstring for the gating rules)."""
+    docstring for the gating rules).
+
+    Sparse-engine candidates (``engine="sparse"`` x candidate-set size)
+    join the grid so ``"auto"`` resolution can pick the dense/sparse
+    crossover per shape — the dense network model (``net > 0``) gates
+    them out, since the sparse engine has no in-scan netsim path yet.
+    """
     if include_pallas is None:
         include_pallas = shape.backend == "tpu"
     collectives = ["gather"]
@@ -58,7 +77,12 @@ def candidate_space(shape: TuneShape, *,
     if include_pallas:
         kernel_paths += [(True, bd) for bd in block_ds
                          if bd <= max(shape.d, min(block_ds))]
-    return [Candidate(chunk=c, collective=col, block_d=bd, use_pallas=up)
+    engines = [("dense", None)]
+    if include_sparse and shape.net == 0:
+        engines += [("sparse", cc) for cc in sparse_candidates]
+    return [Candidate(chunk=c, collective=col, block_d=bd, use_pallas=up,
+                      engine=eng, candidates=cc)
             for c in chunks
             for col in collectives
-            for up, bd in kernel_paths]
+            for up, bd in kernel_paths
+            for eng, cc in engines]

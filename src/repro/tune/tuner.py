@@ -63,6 +63,7 @@ class TuneResult:
         return TuneEntry(
             block_d=self.best.block_d, collective=self.best.collective,
             chunk=self.best.chunk, use_pallas=self.best.use_pallas,
+            engine=self.best.engine, candidates=self.best.candidates,
             seconds_per_round=self.seconds_per_round.get(self.best),
             tuned={"candidates": len(self.stage1_scores),
                    "survivors": len(self.survivors), **tuned})
@@ -81,11 +82,26 @@ def stage1_score(cost: Dict, chunk: int, backend: str) -> float:
 def prune(scores: Dict[Candidate, float], *, prune_ratio: float = 2.0,
           keep: int = 8) -> List[Candidate]:
     """Stage-1 survivors: within ``prune_ratio`` of the best score,
-    best-first, at most ``keep`` (never empty)."""
+    best-first, at most ``keep`` (never empty).
+
+    The roofline score orders schedules *within* an engine far more
+    reliably than across the dense/sparse divide (dispatch and gather
+    overheads it cannot see dominate the crossover), so the
+    best-scoring candidate of every engine always survives to stage-2
+    timing — pruning can narrow an engine's field but never eliminate
+    an engine outright.
+    """
     ranked = sorted(scores, key=lambda c: scores[c])
     best = scores[ranked[0]]
     surv = [c for c in ranked if scores[c] <= best * prune_ratio]
-    return surv[:keep] or ranked[:1]
+    surv = surv[:keep] or ranked[:1]
+    engines_kept = {getattr(c, "engine", "dense") for c in surv}
+    for c in ranked:
+        eng = getattr(c, "engine", "dense")
+        if eng not in engines_kept:
+            surv.append(c)
+            engines_kept.add(eng)
+    return surv
 
 
 def time_engine(engine, chunk: int, rounds: int) -> float:

@@ -35,6 +35,7 @@ def mlp_runner_factory(n: int, *, batch: int = 4, rounds: int = 10 ** 9,
     from ..dlrt import DecentralizedRunner, RunnerConfig
     from ..models.tiny import mlp_loss, mlp_params
     from ..optim import sgd
+    from ..sparse import SparseMorphStrategy
 
     rng = np.random.default_rng(seed)
     ds = make_image_classification(max(600, n * 20), num_classes=4,
@@ -45,19 +46,30 @@ def mlp_runner_factory(n: int, *, batch: int = 4, rounds: int = 10 ** 9,
     interpret_on = jax.default_backend() == "cpu"
 
     def make_runner(cand: Candidate):
+        # Sparse candidates time the sparse-native Morph control plane
+        # (gossiped candidate sets of the candidate's size) against the
+        # same dense workload — the engine knob alone decides the data
+        # plane, so a cache entry's winner is directly actionable.
+        if cand.engine == "sparse":
+            strategy = SparseMorphStrategy(n=n, k=k,
+                                           candidates=cand.candidates,
+                                           delta_r=sim_every, seed=seed)
+        else:
+            strategy = InGraphMorphStrategy(n=n, k=k, view_size=k + 2,
+                                            seed=seed)
         return DecentralizedRunner(
             init_fn=mlp_params, loss_fn=mlp_loss, eval_fn=mlp_loss,
             optimizer=sgd(0.05),
             batcher=StackedBatcher(tr, parts, batch, seed=seed + 3),
             test_batch=test,
-            strategy=InGraphMorphStrategy(n=n, k=k, view_size=k + 2,
-                                          seed=seed),
+            strategy=strategy,
             cfg=RunnerConfig(
                 n_nodes=n, rounds=rounds, eval_every=10 ** 9,
                 sim_every=sim_every, seed=seed, compiled=True,
                 use_pallas=cand.use_pallas,
                 interpret=cand.use_pallas and interpret_on,
                 block_d=cand.block_d, collective=cand.collective,
-                chunk=cand.chunk, mesh_devices=mesh_devices, net=net))
+                chunk=cand.chunk, engine=cand.engine,
+                mesh_devices=mesh_devices, net=net))
 
     return make_runner

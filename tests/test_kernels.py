@@ -78,6 +78,97 @@ def test_graph_mix_masked_fused(n, d, dtype):
                                np.asarray(want, np.float32), atol=atol)
 
 
+# ---------------------------------------------------------------------------
+# block-sparse graph_mix (CSR gather-tiles-then-MAC) vs the dense kernel
+# ---------------------------------------------------------------------------
+
+def _random_csr(seed, n, k):
+    """[n, k] distinct non-self senders + row-stochastic (w, w_self)."""
+    rng = np.random.default_rng(seed)
+    idx = np.stack([rng.choice([j for j in range(n) if j != i],
+                               size=k, replace=False)
+                    for i in range(n)]).astype(np.int32)
+    raw = rng.random((n, k + 1)).astype(np.float32) + 0.1
+    raw /= raw.sum(axis=1, keepdims=True)
+    return (jnp.asarray(idx), jnp.asarray(raw[:, :k]),
+            jnp.asarray(raw[:, k]))
+
+
+def _csr_to_dense(idx, w, w_self, n):
+    dense = np.zeros((n, n), np.float32)
+    np.add.at(dense, (np.repeat(np.arange(n), idx.shape[1]),
+                      np.asarray(idx).ravel()), np.asarray(w).ravel())
+    dense[np.arange(n), np.arange(n)] += np.asarray(w_self)
+    return jnp.asarray(dense)
+
+
+# Sweep covers the engine's awkward shapes: n % 8 != 0 (row padding with
+# own-row parked tail indices), odd D (D-block padding), and k from
+# barely-sparse to the fig12 operating point k=8.
+@pytest.mark.parametrize("n,d", [(8, 256), (33, 300), (7, 129),
+                                 (50, 1000), (16, 8192 + 7)])
+@pytest.mark.parametrize("k", [2, 3, 8])
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_graph_mix_sparse_parity_vs_dense_mix(n, d, k, dtype):
+    if k >= n:
+        pytest.skip("k must stay below n")
+    x = jax.random.normal(jax.random.PRNGKey(n * 13 + d + k),
+                          (n, d)).astype(dtype)
+    idx, w, w_self = _random_csr(n + k, n, k)
+    got = ops.mix_sparse(idx, w, w_self, x, interpret=True)
+    want = ops.mix(_csr_to_dense(idx, w, w_self, n), x, interpret=True)
+    atol = 1e-4 * np.sqrt(k + 1) if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_mix_sparse_mask_parks_invalid_slots():
+    """Masked slots contribute nothing, whatever garbage idx/w carry."""
+    n, d, k = 9, 64, 3
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    idx, w, w_self = _random_csr(3, n, k)
+    mask = jnp.asarray(np.random.default_rng(4).random((n, k)) < 0.5)
+    w_valid = jnp.where(mask, w, 0.0)
+    want = ops.mix(_csr_to_dense(idx, w_valid, w_self, n), x,
+                   interpret=True)
+    trash_idx = jnp.where(mask, idx, n - 1)
+    trash_w = jnp.where(mask, w, 7.5)
+    got = ops.mix_sparse(trash_idx, trash_w, w_self, x, mask=mask,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+
+
+def test_mix_sparse_xla_fallback_matches_kernel():
+    """interpret=False on CPU routes to the XLA gather path — same
+    numbers as the Pallas body to f32 tolerance."""
+    n, d, k = 16, 512, 4
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    idx, w, w_self = _random_csr(7, n, k)
+    kern = ops.mix_sparse(idx, w, w_self, x, interpret=True)
+    xla = ops.mix_sparse(idx, w, w_self, x, interpret=False)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(xla),
+                               atol=1e-5)
+
+
+def test_mix_sparse_pytree_matches_engine_gather_path():
+    """ops.mix_sparse_pytree (the engine's Pallas sparse mixing) ==
+    repro.sparse.mix.sparse_mix_pytree (the pure-jnp path)."""
+    from repro.sparse import SparseAdjacency, sparse_mix_pytree
+    n, k = 10, 3
+    idx, w, w_self = _random_csr(11, n, k)
+    adj = SparseAdjacency(idx=idx, w=w, w_self=w_self,
+                          mask=jnp.ones((n, k), bool))
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(12), (n, 9, 3)),
+            "b": jax.random.normal(jax.random.PRNGKey(13), (n, 17))}
+    got = ops.mix_sparse_pytree(idx, w, w_self, tree, mask=adj.mask,
+                                interpret=True)
+    want = sparse_mix_pytree(adj, tree)
+    for key in tree:
+        np.testing.assert_allclose(np.asarray(got[key]),
+                                   np.asarray(want[key]), atol=1e-5)
+
+
 def test_mix_masked_pytree_matches_uniform_mixing():
     """The compiled engine's fused mixing path == uniform_weights + mix."""
     from repro.core import apply_mixing, uniform_weights_jax

@@ -1,0 +1,195 @@
+"""Property tests for the sparse subsystem's CSR adjacency layer
+(DESIGN.md §11): in-degree invariants, row-stochasticity under loss
+renormalization, and lossless dense <-> CSR round-trips.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.mixing import uniform_weights_jax
+from repro.sparse import (SparseAdjacency, SparseEpidemicStrategy,
+                          SparseMorphStrategy, dense_to_csr,
+                          full_candidates, gossip_candidates,
+                          pad_adjacency, renormalize_drops, to_dense,
+                          uniform_csr_weights, validate,
+                          validate_against_dense)
+
+
+def _random_topology(rng, n, max_deg):
+    """Random dense (edges, w): no self loops, row-stochastic weights
+    over in-edges + self."""
+    edges = np.zeros((n, n), bool)
+    for i in range(n):
+        deg = int(rng.integers(0, max_deg + 1))
+        others = [j for j in range(n) if j != i]
+        picks = rng.choice(others, size=min(deg, len(others)),
+                           replace=False)
+        edges[i, picks] = True
+    raw = rng.random((n, n)) * edges
+    raw[np.arange(n), np.arange(n)] = rng.random(n) + 0.1
+    w = raw / raw.sum(axis=1, keepdims=True)
+    return jnp.asarray(edges), jnp.asarray(w, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense <-> CSR round-trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 10), st.integers(0, 4))
+def test_dense_csr_roundtrip_lossless(seed, n, max_deg):
+    """Any valid dense topology survives dense -> CSR -> dense exactly
+    when the slot budget covers the max in-degree."""
+    rng = np.random.default_rng(seed)
+    max_deg = min(max_deg, n - 1)
+    edges, w = _random_topology(rng, n, max_deg)
+    adj = dense_to_csr(edges, w, max(max_deg, 1))
+    validate(adj)
+    validate_against_dense(adj, edges, w)
+    edges2, w2 = to_dense(adj)
+    assert np.array_equal(np.asarray(edges2), np.asarray(edges))
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 10))
+def test_uniform_csr_weights_bitwise_matches_dense_uniform(seed, n):
+    """uniform_csr_weights computes the exact 1/(deg+1) floats
+    uniform_weights_jax produces — the bitwise-conformance anchor."""
+    rng = np.random.default_rng(seed)
+    edges, _ = _random_topology(rng, n, n - 1)
+    w_dense = uniform_weights_jax(edges)
+    adj = dense_to_csr(edges, None, max(1, n - 1))
+    _, w_rt = to_dense(adj)
+    assert np.array_equal(np.asarray(w_rt), np.asarray(w_dense))
+
+
+# ---------------------------------------------------------------------------
+# in-degree invariant: exactly k after every graph_round
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(4, 12), st.integers(1, 3))
+def test_sparse_morph_in_degree_exactly_k_every_round(seed, n, k):
+    strat = SparseMorphStrategy(n=n, k=k, delta_r=2, seed=seed)
+    gstate = strat.init_graph_state()
+    params = {"w": jnp.asarray(
+        np.random.default_rng(seed).random((n, 5)), jnp.float32)}
+    for rnd in range(6):
+        gstate, adj = strat.graph_round(gstate, jnp.int32(rnd), params)
+        validate(adj)
+        deg = np.asarray(adj.in_degree())
+        assert (deg == k).all(), f"round {rnd}: in-degree {deg} != {k}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(4, 12), st.integers(1, 3))
+def test_sparse_epidemic_in_degree_exactly_k_every_round(seed, n, k):
+    strat = SparseEpidemicStrategy(n=n, k=k, seed=seed)
+    gstate = strat.init_graph_state()
+    for rnd in range(4):
+        gstate, adj = strat.graph_round(gstate, jnp.int32(rnd))
+        validate(adj)
+        assert (np.asarray(adj.in_degree()) == k).all()
+
+
+# ---------------------------------------------------------------------------
+# row-stochasticity under loss renormalization
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 10), st.integers(1, 4))
+def test_renormalize_drops_keeps_rows_stochastic(seed, n, k):
+    """Dropping any slot subset folds the lost mass into w_self — every
+    row still sums to 1 (the netsim loss-renormalization contract)."""
+    rng = np.random.default_rng(seed)
+    k = min(k, n - 1)
+    edges, w = _random_topology(rng, n, k)
+    adj = dense_to_csr(edges, w, k)
+    drop = jnp.asarray(rng.random((n, k)) < 0.5)
+    adj2 = renormalize_drops(adj, drop)
+    validate(adj2)
+    rowsums = np.asarray(adj2.w).sum(axis=1) + np.asarray(adj2.w_self)
+    np.testing.assert_allclose(rowsums, 1.0, atol=1e-5)
+    # dropped slots carry no weight and are parked on the own row
+    kept = np.asarray(adj2.mask)
+    assert not (kept & np.asarray(drop)).any()
+
+
+# ---------------------------------------------------------------------------
+# padding, candidates, validation errors
+# ---------------------------------------------------------------------------
+
+def test_pad_adjacency_padded_rows_are_identity():
+    edges, w = _random_topology(np.random.default_rng(0), 5, 2)
+    adj = dense_to_csr(edges, w, 2)
+    apad = pad_adjacency(adj, 8)
+    assert apad.n == 8
+    assert not np.asarray(apad.mask)[5:].any()
+    np.testing.assert_array_equal(np.asarray(apad.w_self)[5:], 1.0)
+    np.testing.assert_array_equal(np.asarray(apad.w)[5:], 0.0)
+    # real rows are untouched
+    edges2, w2 = to_dense(apad)
+    assert np.array_equal(np.asarray(edges2)[:5, :5], np.asarray(edges))
+
+
+def test_gossip_candidates_floor_and_streams():
+    """Every row keeps >= k valid candidates (its current neighbors),
+    none of them self, and the draw is a pure function of the round."""
+    n, k, c = 12, 3, 9
+    strat = SparseMorphStrategy(n=n, k=k, candidates=c, seed=0)
+    idx = strat.init_graph_state()
+    cand, valid = gossip_candidates(0, jnp.int32(4), idx, c)
+    cand2, valid2 = gossip_candidates(0, jnp.int32(4), idx, c)
+    assert np.array_equal(np.asarray(cand), np.asarray(cand2))
+    assert np.array_equal(np.asarray(valid), np.asarray(valid2))
+    cand_np, valid_np = np.asarray(cand), np.asarray(valid)
+    assert (valid_np.sum(axis=1) >= k).all()
+    rows = np.arange(n)[:, None]
+    assert not ((cand_np == rows) & valid_np).any()
+    # first k slots are the current neighbors verbatim
+    assert np.array_equal(cand_np[:, :k], np.asarray(idx))
+    # a different round draws a different exploration tail
+    cand3, _ = gossip_candidates(0, jnp.int32(5), idx, c)
+    assert not np.array_equal(np.asarray(cand3), cand_np)
+
+
+def test_gossip_candidates_rejects_too_small_c():
+    idx = jnp.zeros((4, 2), jnp.int32)
+    with pytest.raises(ValueError):
+        gossip_candidates(0, jnp.int32(0), idx, 2)
+
+
+def test_full_candidates_is_all_pairs():
+    cand, valid = full_candidates(5)
+    assert np.asarray(valid).sum() == 5 * 4
+    assert not np.asarray(valid)[np.arange(5), np.arange(5)].any()
+
+
+def test_validate_rejects_malformed():
+    n, k = 4, 2
+    edges, w = _random_topology(np.random.default_rng(1), n, k)
+    adj = dense_to_csr(edges, w, k)
+    bad_idx = SparseAdjacency(adj.idx.at[0, 0].set(n + 3), adj.w,
+                              adj.w_self, adj.mask)
+    with pytest.raises(ValueError):
+        validate(bad_idx)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    self_loop = SparseAdjacency(
+        jnp.broadcast_to(rows[:, None], (n, k)).astype(jnp.int32),
+        jnp.full((n, k), 0.1, jnp.float32), adj.w_self,
+        jnp.ones((n, k), bool))
+    with pytest.raises(ValueError):
+        validate(self_loop)
+    not_stochastic = SparseAdjacency(adj.idx, adj.w * 2, adj.w_self,
+                                     adj.mask)
+    with pytest.raises(ValueError):
+        validate(not_stochastic)
+
+
+def test_dense_to_csr_rejects_overflowing_degree():
+    edges = jnp.asarray(~np.eye(4, dtype=bool))      # in-degree 3
+    adj = dense_to_csr(edges, None, 2)               # only 2 slots
+    with pytest.raises(ValueError):
+        validate_against_dense(adj, edges)

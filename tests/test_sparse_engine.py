@@ -1,0 +1,372 @@
+"""Sparse superstep engine conformance (DESIGN.md §11).
+
+Headline contracts:
+
+* **Compat exact mode** — any dense in-graph strategy run under
+  ``engine="sparse"``, ``sparse_mix="exact"`` produces the *bitwise*
+  trajectory of the dense engine (identical mixing contraction; the CSR
+  machinery only changes what the scan carries/emits).  This is the
+  acceptance criterion's "candidate set = full population" case: the
+  dense strategies see every peer.
+* **Compat gather mode** — in-scan dense -> CSR conversion + the sparse
+  gather contraction: same edge sequence, params allclose (a gather+
+  segment-sum cannot be bitwise against a tensordot).
+* **Sparse-native strategies** (CSR control plane, gossiped candidate
+  discovery) run end-to-end through ``DecentralizedRunner``, keep
+  in-degree exactly k, and are chunking/sharding-invariant.
+* **Scaling** — at n=1000, k=8 the sparse engine's HLO shows >= 10x
+  less flops (single device) and >= 10x less collective bytes (16-way
+  psum schedule) than the dense engine: the O(n²) -> O(nk) wall.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (InGraphEpidemicStrategy, InGraphMorphStrategy,
+                        InGraphStaticStrategy)
+from repro.data import (dirichlet_partition, make_image_classification,
+                        train_test_split)
+from repro.data.pipeline import StackedBatcher
+from repro.dlrt import DecentralizedRunner, RunnerConfig
+from repro.models.tiny import mlp_loss as _mlp_loss
+from repro.models.tiny import mlp_params as _mlp_params
+from repro.optim import sgd
+from repro.sparse import SparseEpidemicStrategy, SparseMorphStrategy
+
+N, ROUNDS = 6, 11
+MULTIDEV = jax.device_count() >= 2
+
+
+def _strategies():
+    return {
+        "morph": lambda: InGraphMorphStrategy(n=N, k=2, view_size=4,
+                                              seed=0),
+        "static": lambda: InGraphStaticStrategy(n=N, degree=3, seed=0),
+        "epidemic": lambda: InGraphEpidemicStrategy(n=N, k=2, seed=0),
+    }
+
+
+def _sparse_strategies():
+    return {
+        "sparse-morph": lambda: SparseMorphStrategy(n=N, k=2, seed=0),
+        "sparse-epidemic": lambda: SparseEpidemicStrategy(n=N, k=2,
+                                                          seed=0),
+    }
+
+
+def _runner(strategy, *, rounds=ROUNDS, compiled=True, **cfg_kw):
+    rng = np.random.default_rng(0)
+    ds = make_image_classification(400, num_classes=4, image_size=8,
+                                   seed=0)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, N, 0.5, rng)
+    return DecentralizedRunner(
+        init_fn=_mlp_params, loss_fn=_mlp_loss, eval_fn=_mlp_loss,
+        optimizer=sgd(0.05),
+        batcher=StackedBatcher(tr, parts, 8, seed=3),
+        test_batch={"images": te.images, "labels": te.labels},
+        strategy=strategy,
+        cfg=RunnerConfig(n_nodes=N, rounds=rounds, eval_every=5,
+                         compiled=compiled, **cfg_kw))
+
+
+def _assert_bitwise(a, b):
+    for r, (ea, eb) in enumerate(zip(a.edge_history, b.edge_history)):
+        assert np.array_equal(ea, eb), f"edge sequence diverged at {r}"
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert len(a.log.records) == len(b.log.records)
+    for ra, rb in zip(a.log.records, b.log.records):
+        assert (ra.rnd, ra.comm_bytes, ra.isolated) == \
+            (rb.rnd, rb.comm_bytes, rb.isolated)
+        assert ra.mean_accuracy == rb.mean_accuracy
+        assert ra.mean_loss == rb.mean_loss
+
+
+def _assert_close(a, b, atol=1e-5):
+    for r, (ea, eb) in enumerate(zip(a.edge_history, b.edge_history)):
+        assert np.array_equal(ea, eb), f"edge sequence diverged at {r}"
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Compat mode: dense strategies through the sparse engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(_strategies()))
+def test_compat_exact_is_bitwise_vs_dense_engine(name):
+    dense = _runner(_strategies()[name]())
+    dense.run()
+    sparse = _runner(_strategies()[name](), engine="sparse")
+    sparse.run()
+    _assert_bitwise(dense, sparse)
+
+
+@pytest.mark.parametrize("name", sorted(_strategies()))
+def test_compat_gather_mix_is_close_vs_dense_engine(name):
+    """In-scan CSR conversion + sparse gather mixing: identical edges,
+    params to tolerance (summation order differs from tensordot)."""
+    dense = _runner(_strategies()[name]())
+    dense.run()
+    sparse = _runner(_strategies()[name](), engine="sparse",
+                     sparse_mix="gather")
+    sparse.run()
+    _assert_close(dense, sparse)
+
+
+def test_compat_gather_mix_pallas_interpret_close():
+    dense = _runner(_strategies()["static"]())
+    dense.run()
+    pal = _runner(_strategies()["static"](), engine="sparse",
+                  sparse_mix="gather", use_pallas=True, interpret=True)
+    pal.run()
+    _assert_close(dense, pal, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-native strategies end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(_sparse_strategies()))
+def test_sparse_native_end_to_end(name):
+    r = _runner(_sparse_strategies()[name](), engine="sparse")
+    log = r.run()
+    assert len(r.edge_history) == ROUNDS
+    for e in r.edge_history:                     # decoded dense [n, n]
+        assert e.shape == (N, N)
+        assert (e.sum(axis=1) == 2).all()        # in-degree exactly k
+        assert not np.diag(e).any()
+    assert log.records[-1].isolated == 0
+    assert log.records[-1].comm_bytes == \
+        ROUNDS * N * 2 * r._model_bytes
+
+
+@pytest.mark.parametrize("name", sorted(_sparse_strategies()))
+def test_sparse_native_chunk_invariant(name):
+    a = _runner(_sparse_strategies()[name](), engine="sparse")
+    a.run()
+    b = _runner(_sparse_strategies()[name](), engine="sparse", chunk=3)
+    b.run()
+    _assert_bitwise(a, b)
+
+
+def test_sparse_native_pallas_interpret_close():
+    ref = _runner(SparseEpidemicStrategy(n=N, k=2, seed=0),
+                  engine="sparse")
+    ref.run()
+    pal = _runner(SparseEpidemicStrategy(n=N, k=2, seed=0),
+                  engine="sparse", use_pallas=True, interpret=True)
+    pal.run()
+    _assert_close(ref, pal, atol=1e-4)
+
+
+def test_sparse_morph_full_candidates_sees_every_peer():
+    """candidates >= n switches discovery to the full-population
+    candidate set (Eq.-3 against everyone — the exact control plane)."""
+    r = _runner(SparseMorphStrategy(n=N, k=2, candidates=N, seed=0),
+                engine="sparse")
+    r.run()
+    assert all((e.sum(axis=1) == 2).all() for e in r.edge_history)
+
+
+def test_sparse_state_survives_chunk_boundaries():
+    """graph state written back at chunk exit: a fresh engine seeded
+    from the strategy's updated idx continues the same trajectory."""
+    strat = SparseMorphStrategy(n=N, k=2, seed=0)
+    r = _runner(strat, engine="sparse")
+    r.run()
+    assert np.asarray(strat.idx).shape == (N, 2)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch and validation
+# ---------------------------------------------------------------------------
+
+def test_auto_engine_promotes_sparse_native_strategy():
+    r = _runner(SparseMorphStrategy(n=N, k=2, seed=0), engine="auto")
+    r.run()
+    assert len(r.edge_history) == ROUNDS
+
+
+def test_sparse_strategy_rejects_dense_engine():
+    r = _runner(SparseMorphStrategy(n=N, k=2, seed=0), engine="dense")
+    with pytest.raises(TypeError):
+        r.run()
+
+
+def test_sparse_strategy_rejects_host_loop():
+    r = _runner(SparseMorphStrategy(n=N, k=2, seed=0), engine="sparse",
+                compiled=False)
+    with pytest.raises(TypeError):
+        r.run()
+
+
+def test_sparse_engine_rejects_net():
+    from repro.netsim import DenseNetwork, profiles
+    r = _runner(_strategies()["static"](), engine="sparse",
+                net=DenseNetwork(profiles.ideal()))
+    with pytest.raises(ValueError):
+        r.run()
+
+
+def test_bad_engine_and_mix_rejected():
+    with pytest.raises(ValueError):
+        _runner(_strategies()["static"](), engine="csr").run()
+    with pytest.raises(ValueError):
+        _runner(_strategies()["static"](), engine="sparse",
+                sparse_mix="scatter").run()
+
+
+# ---------------------------------------------------------------------------
+# Sharded
+# ---------------------------------------------------------------------------
+
+def test_sharded_one_device_sparse_matches_single():
+    single = _runner(SparseMorphStrategy(n=N, k=2, seed=0),
+                     engine="sparse")
+    single.run()
+    sh = _runner(SparseMorphStrategy(n=N, k=2, seed=0), engine="sparse",
+                 mesh_devices=1)
+    sh.run()
+    _assert_bitwise(single, sh)
+
+
+needs_multidev = pytest.mark.skipif(
+    not MULTIDEV, reason="needs >= 2 devices (run via "
+    "test_spawn_sparse_multi_device)")
+
+
+@needs_multidev
+@pytest.mark.parametrize("name", sorted(_sparse_strategies()))
+def test_multidev_sparse_gather_matches_single(name):
+    single = _runner(_sparse_strategies()[name](), engine="sparse")
+    single.run()
+    sh = _runner(_sparse_strategies()[name](), engine="sparse",
+                 mesh_devices=jax.device_count())
+    sh.run()
+    _assert_bitwise(single, sh)
+
+
+@needs_multidev
+@pytest.mark.parametrize("name", sorted(_sparse_strategies()))
+def test_multidev_sparse_psum_close(name):
+    """The push/reduce-scatter schedule reorders the reduction —
+    allclose, same edges (the control plane is replicated)."""
+    single = _runner(_sparse_strategies()[name](), engine="sparse")
+    single.run()
+    ps = _runner(_sparse_strategies()[name](), engine="sparse",
+                 mesh_devices=jax.device_count(), collective="psum")
+    ps.run()
+    _assert_close(single, ps, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_spawn_sparse_multi_device():
+    """Re-run this file's _multidev tests on 8 simulated host devices
+    (node padding exercised: 6 nodes over 8 devices pads to 8)."""
+    if MULTIDEV:
+        pytest.skip("already multi-device; _multidev tests ran directly")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         __file__, "-k", "multidev"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, \
+        f"multi-device run failed:\n{proc.stdout}\n{proc.stderr}"
+    assert " passed" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Scaling: the O(n²) -> O(nk) acceptance criterion
+# ---------------------------------------------------------------------------
+
+_HLO_SCRIPT = r"""
+import numpy as np
+from repro.core import InGraphEpidemicStrategy
+from repro.data import make_image_classification, train_test_split
+from repro.data.pipeline import StackedBatcher
+from repro.dlrt import DecentralizedRunner, RunnerConfig
+from repro.models.tiny import mlp_loss, mlp_params
+from repro.optim import sgd
+from repro.sparse import SparseEpidemicStrategy
+from repro.launch.hlo_cost import analyse_hlo
+
+N, K = 1000, 8
+ds = make_image_classification(4000, num_classes=4, image_size=8, seed=0)
+tr, te = train_test_split(ds, 0.25)
+parts = np.array_split(np.arange(len(tr.labels)), N)
+test = {"images": te.images[:64], "labels": te.labels[:64]}
+
+def cost(strategy, **kw):
+    cfg = RunnerConfig(n_nodes=N, rounds=10, eval_every=10 ** 9,
+                       sim_every=1, seed=0, compiled=True, **kw)
+    runner = DecentralizedRunner(
+        init_fn=mlp_params, loss_fn=mlp_loss, eval_fn=mlp_loss,
+        optimizer=sgd(0.05), batcher=StackedBatcher(tr, parts, 2, seed=3),
+        test_batch=test, strategy=strategy, cfg=cfg)
+    return analyse_hlo(runner._make_engine().compiled_hlo(2))
+
+MESH = {MESH}
+kw = dict(mesh_devices=16, collective="psum") if MESH else {}
+cd = cost(InGraphEpidemicStrategy(n=N, k=K, seed=0), **kw)
+cs = cost(SparseEpidemicStrategy(n=N, k=K, seed=0), engine="sparse", **kw)
+metric = "collective_bytes" if MESH else "flops"
+print(f"RESULT dense={cd[metric]} sparse={cs[metric]}")
+"""
+
+
+@pytest.mark.slow
+def test_hlo_flops_drop_10x_at_n1000_k8():
+    """Single-device superstep HLO at n=1000, k=8: the sparse engine's
+    flops are >= 10x below the dense engine's (nkD vs n²D)."""
+    proc = _run_hlo_script(mesh=False)
+    dense, sparse = _parse_result(proc)
+    assert dense >= 10 * sparse, \
+        f"flops ratio {dense / max(sparse, 1):.1f}x < 10x"
+
+
+@pytest.mark.slow
+def test_hlo_collective_bytes_drop_10x_at_n1000_k8():
+    """16-way psum schedule at n=1000, k=8: per-round collective bytes
+    drop >= 10x (psum_scatter of the k-sparse partial vs the dense
+    [n, D] psum) — collective_bytes scales O(nk·D)."""
+    proc = _run_hlo_script(mesh=True)
+    dense, sparse = _parse_result(proc)
+    assert dense >= 10 * sparse, \
+        f"collective ratio {dense / max(sparse, 1):.1f}x < 10x"
+
+
+def _run_hlo_script(*, mesh):
+    env = dict(os.environ)
+    if mesh:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=16")
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _HLO_SCRIPT.replace("{MESH}", str(mesh))],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, \
+        f"hlo probe failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc
+
+
+def _parse_result(proc):
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    parts = dict(p.split("=") for p in line.split()[1:])
+    return float(parts["dense"]), float(parts["sparse"])

@@ -106,6 +106,35 @@ def test_resolve_deterministic_and_partial():
     assert km.block_d is None and km.chunk == 4
 
 
+def test_resolve_engine_knob():
+    """engine="auto" resolves from the cache entry; an explicit engine
+    is never overridden even when other knobs resolve."""
+    runner = _runner_with(6, 8, engine=AUTO)
+    shape = shape_of(runner.cfg, runner.params)
+    cache = TuningCache()
+    cache.put(shape, dataclasses.replace(ENTRY, engine="sparse",
+                                         candidates=16))
+    knobs = resolve_knobs(runner.cfg, runner.params, cache=cache)
+    assert knobs.engine == "sparse"
+    explicit = dataclasses.replace(runner.cfg, engine="dense",
+                                   block_d=AUTO)
+    knobs = resolve_knobs(explicit, runner.params, cache=cache)
+    assert knobs.engine == "dense" and knobs.block_d == 256
+
+
+def test_candidate_space_has_sparse_engine_candidates():
+    """The grid spans engine={dense,sparse} x candidate-set size, gated
+    off when a dense network model is attached."""
+    cands = candidate_space(SHAPE, chunks=(2, 4))
+    assert any(c.engine == "sparse" and c.candidates is None
+               for c in cands)
+    assert any(c.engine == "sparse" and c.candidates == 16
+               for c in cands)
+    assert any(c.engine == "dense" for c in cands)
+    net_shape = dataclasses.replace(SHAPE, net=3)
+    assert all(c.engine == "dense" for c in candidate_space(net_shape))
+
+
 def test_shape_of_matches_workload():
     runner = _runner_with(6, 8)
     shape = shape_of(runner.cfg, runner.params)
@@ -202,6 +231,25 @@ def test_prune_keeps_best_and_caps():
     assert prune(scores, prune_ratio=1.01, keep=4) == [cands[0]]
 
 
+def test_prune_never_drops_best_sparse_candidate():
+    """Satellite pin: however badly the roofline score ranks the sparse
+    engine (the cost model can't see the dispatch overheads that decide
+    the crossover), its best-scoring candidate survives stage-1 pruning
+    and reaches stage-2 timing."""
+    dense = [Candidate(chunk=c) for c in (2, 4, 8)]
+    sparse = [Candidate(chunk=c, engine="sparse") for c in (2, 4, 8)]
+    scores = {c: float(i + 1) for i, c in enumerate(dense)}
+    scores.update({c: 1000.0 + i for i, c in enumerate(sparse)})
+    surv = prune(scores, prune_ratio=1.5, keep=2)
+    assert surv[0] == dense[0]
+    assert sparse[0] in surv, "pruning dropped every sparse candidate"
+    # and symmetrically: a sparse-dominated score table keeps the best
+    # dense candidate alive
+    flipped = {**{c: 1000.0 + i for i, c in enumerate(dense)},
+               **{c: float(i + 1) for i, c in enumerate(sparse)}}
+    assert dense[0] in prune(flipped, prune_ratio=1.5, keep=2)
+
+
 def test_stage1_score_orders_by_cost():
     cheap = {"flops": 1e6, "bytes": 1e6, "collective_bytes": 0.0}
     costly = {"flops": 1e9, "bytes": 1e9, "collective_bytes": 1e8}
@@ -222,6 +270,11 @@ def test_stage1_never_drops_empirical_best_tiny_shape():
     result = tune(factory, shape=shape, candidates=cands, rounds=16)
     assert result.best in result.survivors
     assert set(result.seconds_per_round) == set(result.survivors)
+    # the engine-preservation rule held on real HLO costs: stage 2 timed
+    # at least one candidate from each engine
+    assert any(c.engine == "sparse" for c in result.survivors), \
+        "stage-1 pruning dropped every sparse candidate"
+    assert any(c.engine == "dense" for c in result.survivors)
 
     # exhaustive: time the non-survivors too
     exhaustive = dict(result.seconds_per_round)
