@@ -81,10 +81,11 @@ def main(argv=None):
     t1_nodes = size(64, 32, 8)
     t1_rounds = size(400, 200, 12)
 
-    from . import (fig2_connectivity, fig3_curves, fig4_connectivity_levels,
-                   fig5_ablation, fig67_isolation, fig8_async,
-                   fig9_superstep, fig10_sharded, fig11_fused_net,
-                   fig12_sparse, kernel_bench, roofline, table1_accuracy)
+    from . import (fig2_connectivity, fig3_accuracy, fig3_curves,
+                   fig4_connectivity_levels, fig5_ablation, fig67_isolation,
+                   fig8_async, fig9_superstep, fig10_sharded,
+                   fig11_fused_net, fig12_sparse, kernel_bench, roofline,
+                   table1_accuracy)
 
     sections = [
         ("fig2", lambda: fig2_connectivity.main(
@@ -97,6 +98,18 @@ def main(argv=None):
             ["--rounds", str(t1_rounds), "--nodes", str(t1_nodes)])),
         ("fig3", lambda: fig3_curves.main(
             ["--rounds", str(rounds), "--nodes", str(nodes)])),
+        # Engine-path accuracy reproduction (GN-LeNet through the
+        # compiled/sparse/sharded engines); smoke shrinks the CNN and
+        # population but still exercises every engine row + the
+        # chunked-exchange bitwise pin.
+        ("fig3_accuracy", lambda: fig3_accuracy.main(
+            ["--nodes", "50", "100", "--rounds", "150",
+             "--eval-every", "25"] if args.full
+            else ["--nodes", "8", "--rounds", "6", "--eval-every", "3",
+                  "--width", "4", "--image-size", "8",
+                  "--samples", "1500", "--test-samples", "96",
+                  "--eval-batch-chunk", "32", "--mix-chunk-d", "64"]
+            if args.smoke else [])),
         ("fig4", lambda: fig4_connectivity_levels.main(
             ["--rounds", str(size(rounds * 2 // 3, max(rounds * 2 // 3,
                                                        60), rounds)),

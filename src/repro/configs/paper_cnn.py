@@ -24,5 +24,15 @@ FEMNIST_CNN = CNNConfig(name="femnist-gn-lenet", in_channels=1,
                         num_classes=62, image_size=28)
 
 
+DATASETS = {"cifar10": CIFAR10_CNN, "femnist": FEMNIST_CNN}
+
+
 def get_cnn_config(dataset: str) -> CNNConfig:
-    return {"cifar10": CIFAR10_CNN, "femnist": FEMNIST_CNN}[dataset]
+    """The paper CNN for ``dataset``; raises :class:`ValueError` naming
+    the valid dataset keys on an unknown name."""
+    try:
+        return DATASETS[dataset]
+    except KeyError:
+        raise ValueError(
+            f"unknown dataset {dataset!r}; valid datasets: "
+            f"{', '.join(sorted(DATASETS))}") from None

@@ -75,28 +75,61 @@ def uniform_weights_jax(edges: jax.Array) -> jax.Array:
 # Application to stacked pytrees.
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("precision",))
+def tensordot_mix_leaf(w: jax.Array, leaf: jax.Array,
+                       chunk_d: Optional[int] = None,
+                       precision=jax.lax.Precision.HIGHEST,
+                       cast_back: bool = True) -> jax.Array:
+    """``W [m, n] @ leaf [n, ...]`` over the node axis, one leaf at a time.
+
+    ``chunk_d=None`` is the classic whole-leaf contraction: tensordot
+    over the node axis only, no reshape, so sharded trailing dims stay
+    sharded.  With ``chunk_d`` set, the flattened feature axis is
+    processed ``chunk_d`` elements per step so the f32-upcast operand
+    and result buffers stay ``O(n · chunk_d)`` instead of ``O(n ·
+    leaf_size)`` — the chunked-per-layer exchange path (DESIGN.md §12).
+    Every output element is the *same* length-``n`` dot product either
+    way (the contraction axis is never split), so chunking is
+    bitwise-invariant.
+
+    ``cast_back=False`` returns the f32 accumulation (the sharded psum
+    schedule reduces partial products across devices before the final
+    downcast).
+    """
+    w32 = w.astype(jnp.float32)
+    out_dtype = leaf.dtype if cast_back else jnp.float32
+    if chunk_d is None:
+        mixed = jnp.tensordot(w32, leaf.astype(jnp.float32),
+                              axes=((1,), (0,)), precision=precision)
+        return mixed.astype(out_dtype)
+    m = w.shape[0]
+    flat = leaf.reshape(leaf.shape[0], -1)
+    d = flat.shape[1]
+    pieces = [jnp.tensordot(w32, flat[:, s:s + chunk_d].astype(jnp.float32),
+                            axes=((1,), (0,)), precision=precision)
+              for s in range(0, max(d, 1), chunk_d)]
+    out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=1)
+    return out.reshape((m,) + leaf.shape[1:]).astype(out_dtype)
+
+
+@partial(jax.jit, static_argnames=("precision", "chunk_d"))
 def apply_mixing(w: jax.Array, stacked_params,
-                 precision: str = "highest"):
+                 precision: str = "highest",
+                 chunk_d: Optional[int] = None):
     """``x_i <- sum_j W[i,j] x_j`` for every leaf of a node-stacked pytree.
 
     Leaves have shape ``[n, ...]``.  The contraction runs in f32 and casts
     back to the leaf dtype, so bf16-stored models do not lose the averaging
-    precision (matters once n is large).
+    precision (matters once n is large).  ``chunk_d`` bounds the f32
+    upcast buffers per leaf (:func:`tensordot_mix_leaf`) — bitwise the
+    same result, only the buffer footprint changes; leave ``None`` when
+    leaves carry sharded trailing dims (chunking reshapes them).
     """
     prec = jax.lax.Precision(precision.lower()) \
         if isinstance(precision, str) else precision
 
-    def mix_leaf(leaf):
-        # tensordot over the node axis only — no reshape, so sharded
-        # trailing dims stay sharded (the contraction lowers to the
-        # node-axis collective schedule the roofline measures).
-        mixed = jnp.tensordot(w.astype(jnp.float32),
-                              leaf.astype(jnp.float32),
-                              axes=((1,), (0,)), precision=prec)
-        return mixed.astype(leaf.dtype)
-
-    return jax.tree_util.tree_map(mix_leaf, stacked_params)
+    return jax.tree_util.tree_map(
+        lambda leaf: tensordot_mix_leaf(w, leaf, chunk_d, prec),
+        stacked_params)
 
 
 def mix_numpy(w: np.ndarray, stacked: dict) -> dict:

@@ -23,6 +23,13 @@ def dirichlet_partition(labels: np.ndarray, n_nodes: int, alpha: float,
 
     Resamples (up to 100 tries) until every node holds at least
     ``min_per_node`` samples, as is standard practice.
+
+    Per class, node boundaries are the *rounded* cumulative proportions
+    (count-conserving): flooring them instead (``.astype(int)``) shifts
+    every internal cut left by ~0.5 samples, systematically inflating
+    the last node by ~``n_classes / 2`` samples and starving node 0 —
+    and at alpha = 0.1 it zeroes any node whose per-class share lands
+    below one sample, burning resample retries.
     """
     labels = np.asarray(labels)
     classes = np.unique(labels)
@@ -32,7 +39,7 @@ def dirichlet_partition(labels: np.ndarray, n_nodes: int, alpha: float,
             idx = np.flatnonzero(labels == c)
             rng.shuffle(idx)
             props = rng.dirichlet(np.full(n_nodes, alpha))
-            cuts = (np.cumsum(props)[:-1] * len(idx)).astype(int)
+            cuts = np.round(np.cumsum(props)[:-1] * len(idx)).astype(int)
             for node, chunk in enumerate(np.split(idx, cuts)):
                 parts[node].extend(chunk.tolist())
         if min(len(p) for p in parts) >= min_per_node:

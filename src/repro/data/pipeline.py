@@ -61,11 +61,16 @@ class DeviceDataStream:
     """Device-resident dataset for the compiled superstep (DESIGN.md §8).
 
     Instead of the host drawing + staging ``[K, n, b, ...]`` batch stacks
-    per chunk (:class:`StackedBatcher`), the *entire* per-node shards live
-    on device as ``[n, S, ...]`` arrays (``S`` = the largest shard size;
-    shorter shards wrap) and each round's batch is drawn **inside the scan
-    body** with ``jax.random`` — zero host transfer per round, which is
-    what unlocks the paper-scale n=100, 10^4-round sweeps.
+    per chunk (:class:`StackedBatcher`), the dataset lives on device
+    **once** as its ``[N_total, ...]`` arrays plus an ``[n, S]`` int32
+    shard-index table (``S`` = the largest shard size; shorter shards
+    wrap), and each round's batch is drawn **inside the scan body** with
+    ``jax.random`` — zero host transfer per round, which is what unlocks
+    the paper-scale n=100, 10^4-round sweeps.  The indexed layout
+    matters for image data: materializing per-node shard copies
+    (``[n, S, H, W, C]``) multiplies the dataset by the shard count,
+    which for CIFAR-shaped shards is gigabytes; the index table is
+    ``4·n·S`` bytes.
 
     Batch identity contract: node ``i``'s round-``r`` batch is a pure
     function of ``(seed, r, i)`` (``fold_in(fold_in(key, r), i)``), so the
@@ -82,30 +87,34 @@ class DeviceDataStream:
         if min(sizes) == 0:
             raise ValueError("empty shard")
         S = max(sizes)
-        idx = np.stack([np.pad(np.asarray(p), (0, S - len(p)), mode="wrap")
-                        for p in parts])                       # [n, S]
-        self.data = {"images": ds.images[idx], "labels": ds.labels[idx]}
+        self.data = {"images": ds.images, "labels": ds.labels}
+        self.index = np.stack(                                 # [n, S]
+            [np.pad(np.asarray(p), (0, S - len(p)), mode="wrap")
+             for p in parts]).astype(np.int32)
         self.sizes = np.asarray(sizes, np.int32)               # [n]
         self.batch = batch_size
         self.seed = seed
         self.n = len(parts)
 
-    def draw(self, data, sizes, node_ids, rnd):
-        """One stacked batch *inside jit*: ``data`` is (a shard of) the
-        ``[n, S, ...]`` arrays, ``sizes``/``node_ids`` the matching
-        ``[n]`` slices, ``rnd`` the traced round index.  Returns a
-        ``[n, b, ...]`` batch pytree.  Sampling is with replacement,
-        uniform over each node's true shard (the wrap-padding tail is
-        never indexed)."""
+    def draw(self, data, index, sizes, node_ids, rnd):
+        """One stacked batch *inside jit*: ``data`` is the shared
+        ``[N_total, ...]`` dataset (replicated under sharding),
+        ``index``/``sizes``/``node_ids`` the (shard of the) ``[n, S]`` /
+        ``[n]`` per-node tables, ``rnd`` the traced round index.
+        Returns a ``[n, b, ...]`` batch pytree.  Sampling is with
+        replacement, uniform over each node's true shard (the
+        wrap-padding tail is never indexed), and draws the bitwise-same
+        samples the former materialized ``[n, S, ...]`` layout did."""
         import jax
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), rnd)
 
-        def one(d, size, nid):
+        def one(ix, size, nid):
             k = jax.random.fold_in(key, nid)
             take = jax.random.randint(k, (self.batch,), 0, size)
-            return jax.tree_util.tree_map(lambda x: x[take], d)
+            sel = ix[take]
+            return jax.tree_util.tree_map(lambda x: x[sel], data)
 
-        return jax.vmap(one)(data, sizes, node_ids)
+        return jax.vmap(one)(index, sizes, node_ids)
 
 
 class TokenBatcher:

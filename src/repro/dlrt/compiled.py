@@ -52,9 +52,11 @@ properties returning the logical ``[n, ...]`` view.
 
 **Batch streaming.**  By default each chunk prefetches its ``[K, n, b,
 ...]`` batch stack from the host batcher.  Pass ``data_stream``
-(:class:`repro.data.DeviceDataStream`) instead to keep the *entire*
-per-node shards device-resident and draw every round's batch inside the
-scan body with ``jax.random`` — no host transfer per round at all.
+(:class:`repro.data.DeviceDataStream`) instead to keep the dataset
+device-resident once (shared ``[N_total, ...]`` arrays plus per-node
+``[n, S]`` index tables; under sharding the dataset is replicated and
+only the tables are node-sharded) and draw every round's batch inside
+the scan body with ``jax.random`` — no host transfer per round at all.
 
 **Dense network model** (DESIGN.md §9).  Pass ``net``
 (:class:`repro.netsim.DenseNetwork`, surfaced as ``RunnerConfig.net``)
@@ -87,7 +89,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import apply_mixing
-from ..core.mixing import uniform_weights_jax
+from ..core.mixing import tensordot_mix_leaf, uniform_weights_jax
 from ..data.pipeline import DeviceDataStream, StackedBatcher
 from ..kernels import ops
 from ..optim import Optimizer
@@ -178,7 +180,24 @@ class CompiledSuperstep:
       the identical dense contraction (bitwise vs the dense engine —
       the conformance anchor), ``"gather"`` converts each round's
       ``(edges, w)`` to CSR in-scan and mixes through the sparse
-      gather path (parity to tolerance).
+      gather path (parity to tolerance);
+    * ``mix_chunk_d`` — chunked per-layer exchange (DESIGN.md §12):
+      every mixing contraction (dense tensordot, sharded row-block and
+      psum schedules, the net-mode staleness contraction, the sparse
+      gather) processes at most this many flattened feature elements
+      per step, so the f32-upcast / neighbor-gather buffers stay
+      ``O(n · mix_chunk_d)`` instead of ``O(n · leaf_size)`` — the knob
+      that lets multi-MB CNN layers through the engines.  Contraction
+      axes are never split: dense tensordot paths are bitwise-invariant
+      to the chunking; the sparse gather path is last-ulp allclose with
+      identical edge sequences (XLA fuses the self-term add
+      shape-dependently).  Pallas paths do their own blocking and
+      ignore it;
+    * ``eval_batch_chunk`` — evaluate the shared test set at most this
+      many samples per vmapped forward pass, combining chunk means by
+      sample-count weights (bounds the ``[n, b_test, ...]`` activation
+      footprint; f32-rounding-close, not bitwise, across different
+      chunkings).
 
     Invariants: ``params`` / ``opt_state`` expose the logical ``[n,
     ...]`` view even in sharded mode (padding is internal); the decoded
@@ -197,9 +216,12 @@ class CompiledSuperstep:
                  mesh=None, collective: str = "gather",
                  data_stream: Optional[DeviceDataStream] = None,
                  net=None, chunk: Optional[int] = None,
-                 engine: str = "dense", sparse_mix: str = "exact"):
+                 engine: str = "dense", sparse_mix: str = "exact",
+                 mix_chunk_d: Optional[int] = None,
+                 eval_batch_chunk: Optional[int] = None):
         if isinstance(block_d, str) or isinstance(chunk, str) \
-                or engine == "auto":
+                or isinstance(mix_chunk_d, str) \
+                or isinstance(eval_batch_chunk, str) or engine == "auto":
             raise TypeError(
                 "the engine takes concrete knobs; \"auto\" sentinels are "
                 "resolved by DecentralizedRunner via repro.tune."
@@ -247,6 +269,8 @@ class CompiledSuperstep:
         self.cfg = cfg
         self.strategy = strategy
         self.engine = engine
+        self.mix_chunk_d = mix_chunk_d
+        self.eval_batch_chunk = eval_batch_chunk
         self.sparse_native = sparse_native
         self.sparse_mix = sparse_mix
         self._last_isolated: Optional[int] = None
@@ -374,13 +398,9 @@ class CompiledSuperstep:
             if use_pallas:
                 return ops.mix_pytree(w_rows.astype(jnp.float32), full,
                                       block_d=block_d, interpret=interpret)
-            def one(leaf):
-                mixed = jnp.tensordot(w_rows.astype(jnp.float32),
-                                      leaf.astype(jnp.float32),
-                                      axes=((1,), (0,)),
-                                      precision=jax.lax.Precision.HIGHEST)
-                return mixed.astype(leaf.dtype)
-            return jax.tree_util.tree_map(one, full)
+            return jax.tree_util.tree_map(
+                lambda leaf: tensordot_mix_leaf(w_rows, leaf, mix_chunk_d),
+                full)
 
         def mix_psum(w_cols, local):
             # each device contributes W[:, its cols] @ X[its rows]; the
@@ -392,10 +412,10 @@ class CompiledSuperstep:
                                    block_d=block_d, interpret=interpret)
                     part = part.reshape((n_pad,) + leaf.shape[1:])
                 else:
-                    part = jnp.tensordot(
-                        w_cols.astype(jnp.float32),
-                        leaf.astype(jnp.float32), axes=((1,), (0,)),
-                        precision=jax.lax.Precision.HIGHEST)
+                    # f32 partial products — the psum reduces before the
+                    # final downcast, so cast_back is deferred.
+                    part = tensordot_mix_leaf(w_cols, leaf, mix_chunk_d,
+                                              cast_back=False)
                 summed = jax.lax.psum(part, axes)
                 own = jax.lax.dynamic_slice_in_dim(
                     summed, shard_index() * n_local, n_local, 0)
@@ -410,7 +430,8 @@ class CompiledSuperstep:
                 return ops.mix_sparse_pytree(
                     adj.idx, adj.w, adj.w_self, tree, mask=adj.mask,
                     block_d=block_d, interpret=interpret)
-            return sparse_mix_pytree(adj, tree, rows=rows)
+            return sparse_mix_pytree(adj, tree, rows=rows,
+                                     chunk_d=mix_chunk_d)
 
         # Compat mode (engine="sparse" with a dense-returning strategy)
         # converts each round's (edges, w) in-scan; n-1 slots make the
@@ -505,13 +526,10 @@ class CompiledSuperstep:
             if use_pallas:
                 return ops.mix_pytree(w_stal_flat, flat, block_d=block_d,
                                       interpret=interpret)
-            def one(leaf):
-                mixed = jnp.tensordot(w_stal_flat.astype(jnp.float32),
-                                      leaf.astype(jnp.float32),
-                                      axes=((1,), (0,)),
-                                      precision=jax.lax.Precision.HIGHEST)
-                return mixed.astype(leaf.dtype)
-            return jax.tree_util.tree_map(one, flat)
+            return jax.tree_util.tree_map(
+                lambda leaf: tensordot_mix_leaf(w_stal_flat, leaf,
+                                                mix_chunk_d),
+                flat)
 
         def round_body(carry, xs):
             # Single-device body: identical to the pre-sharding engine.
@@ -546,7 +564,8 @@ class CompiledSuperstep:
                                             block_d=block_d,
                                             interpret=interpret)
                 else:
-                    params = apply_mixing(w.astype(jnp.float32), params)
+                    params = apply_mixing(w.astype(jnp.float32), params,
+                                          chunk_d=mix_chunk_d)
                 return (params, opt_state, gstate, sim, netstate), edges
             netstate = net_push(params, netstate, rnd, step)
             delivered, d_idx, w_stal, stale_counts = net_effective(
@@ -669,8 +688,21 @@ class CompiledSuperstep:
                                                   n_local, 0)
             def one(leaf):
                 flat = leaf.reshape(n_local, -1).astype(jnp.float32)
-                part = jnp.einsum("nk,nkd->nd", local_w, flat[lidx],
-                                  precision=jax.lax.Precision.HIGHEST)
+                d = flat.shape[1]
+                cd = d if mix_chunk_d is None else min(mix_chunk_d, d)
+                # feature-chunked partials bound the [n_pad, k, chunk]
+                # gather buffer; a single psum_scatter over the
+                # concatenated partial keeps the collective schedule
+                # (and its bitwise result) identical to the unchunked
+                # contraction.
+                part = jnp.concatenate(
+                    [jnp.einsum("nk,nkd->nd", local_w,
+                                flat[:, s:s + cd][lidx],
+                                precision=jax.lax.Precision.HIGHEST)
+                     for s in range(0, d, cd)], axis=1) \
+                    if cd < d else \
+                    jnp.einsum("nk,nkd->nd", local_w, flat[lidx],
+                               precision=jax.lax.Precision.HIGHEST)
                 own = jax.lax.psum_scatter(part, axes,
                                            scatter_dimension=0, tiled=True)
                 own = own + ws_own[:, None] * flat
@@ -729,9 +761,9 @@ class CompiledSuperstep:
             def superstep(carry, rnds, batches):
                 return jax.lax.scan(body, carry, (rnds, batches))
         else:
-            def superstep(carry, rnds, data, sizes, ids):
+            def superstep(carry, rnds, data, index, sizes, ids):
                 def step(c, rnd):
-                    batch = stream.draw(data, sizes, ids, rnd)
+                    batch = stream.draw(data, index, sizes, ids, rnd)
                     return body(c, (rnd, batch))
                 return jax.lax.scan(step, carry, rnds)
 
@@ -758,7 +790,9 @@ class CompiledSuperstep:
                 self._batch_spec = P(None, self._nspec)
                 xs_specs = (P(), None)        # batch tree filled per chunk
             else:
-                xs_specs = (P(), P(self._nspec), P(self._nspec),
+                # (rnds, data, index, sizes, ids): the shared dataset is
+                # replicated; only the per-node tables are node-sharded.
+                xs_specs = (P(), P(), P(self._nspec), P(self._nspec),
                             P(self._nspec))
             self._carry_specs = carry_specs
             self._xs_specs = xs_specs
@@ -769,17 +803,21 @@ class CompiledSuperstep:
             self._superstep = jax.jit(superstep)
 
         if stream is not None:
-            spec = (P(self._nspec) if sharded else None)
-            put = (lambda x: jax.device_put(
-                jnp.asarray(x), NamedSharding(mesh, spec))) if sharded \
-                else jnp.asarray
+            if sharded:
+                put_r = lambda x: jax.device_put(
+                    jnp.asarray(x), NamedSharding(mesh, P()))
+                put_s = lambda x: jax.device_put(
+                    jnp.asarray(x), NamedSharding(mesh, P(self._nspec)))
+            else:
+                put_r = put_s = jnp.asarray
             self._stream_args = (
-                jax.tree_util.tree_map(
-                    put, _pad_nodes(stream.data, self.n_pad)),
-                put(_pad_nodes(stream.sizes, self.n_pad)),
-                put(jnp.arange(self.n_pad, dtype=jnp.int32)))
+                jax.tree_util.tree_map(put_r, stream.data),
+                put_s(_pad_nodes(stream.index, self.n_pad)),
+                put_s(_pad_nodes(stream.sizes, self.n_pad)),
+                put_s(jnp.arange(self.n_pad, dtype=jnp.int32)))
 
-        self._evaluate = jax.jit(make_evaluator(eval_fn))
+        self._evaluate = jax.jit(
+            make_evaluator(eval_fn, batch_chunk=eval_batch_chunk))
 
     # ------------------------------------------------------------------
 
@@ -823,7 +861,8 @@ class CompiledSuperstep:
             data_specs = jax.tree_util.tree_map(
                 lambda _: self._xs_specs[1], self._stream_args[0])
             in_specs = (self._carry_specs, self._xs_specs[0], data_specs,
-                        self._xs_specs[2], self._xs_specs[3])
+                        self._xs_specs[2], self._xs_specs[3],
+                        self._xs_specs[4])
         self._superstep = jax.jit(shard_map(
             self._superstep_fn, mesh=self.mesh, in_specs=in_specs,
             out_specs=(self._carry_specs, self._ys_specs),

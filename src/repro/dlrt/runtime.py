@@ -82,6 +82,20 @@ class RunnerConfig:
     # the dense engine) or "gather" (in-scan CSR conversion + sparse
     # gather mix — parity to tolerance).
     sparse_mix: str = "exact"
+    # Chunked per-layer exchange (DESIGN.md §12): cap on flattened
+    # feature elements per mixing-contraction step, bounding the
+    # engine's f32-upcast / neighbor-gather buffers at
+    # O(n · mix_chunk_d) — required headroom for multi-MB CNN params.
+    # The node/slot contraction axis is never split: dense mixing is
+    # bitwise-invariant to this knob, the sparse gather path last-ulp
+    # allclose (identical edges).  None = whole-leaf contractions.
+    mix_chunk_d: Optional[int] = None
+    # Evaluate the shared test set at most this many samples per vmapped
+    # forward pass (chunk means recombined by sample-count weights) —
+    # bounds the [n, b_test, ...] activation footprint at eval
+    # boundaries.  f32-rounding-close across chunkings, not bitwise;
+    # None = single whole-batch pass.
+    eval_batch_chunk: Optional[int] = None
     # Dense in-scan network model (repro.netsim.DenseNetwork): price
     # latency/staleness/drops/churn inside the fused superstep
     # (DESIGN.md §9).  None = idealized lockstep network.  Requires the
@@ -102,11 +116,40 @@ def make_local_step(loss_fn: Callable, optimizer: Optimizer) -> Callable:
     return local_step
 
 
-def make_evaluator(eval_fn: Callable) -> Callable:
+def make_evaluator(eval_fn: Callable,
+                   batch_chunk: Optional[int] = None) -> Callable:
     """Vmapped every-node evaluation on the shared test batch: returns
-    ``(losses [n], metrics dict of [n] arrays)``."""
+    ``(losses [n], metrics dict of [n] arrays)``.
+
+    ``batch_chunk`` caps how many test samples each vmapped forward pass
+    sees: the test batch is split on its leading axis and the per-chunk
+    mean losses/metrics are recombined by sample-count weights — the
+    memory-aware eval boundary for image models, where the whole-batch
+    ``[n, b_test, H, W, C]`` activation stack is the peak allocation.
+    Assumes ``eval_fn`` returns *mean* statistics over its batch (both
+    in-repo eval fns do).  The recombination introduces one extra f32
+    rounding per chunk, so results are allclose — not bitwise — across
+    different chunkings.
+    """
     def evaluate(params, test):
-        return jax.vmap(lambda p: eval_fn(p, test))(params)
+        per_node = lambda t: jax.vmap(lambda p: eval_fn(p, t))(params)
+        if batch_chunk is None:
+            return per_node(test)
+        b = jax.tree_util.tree_leaves(test)[0].shape[0]
+        if b <= batch_chunk:
+            return per_node(test)
+        losses, metrics = None, None
+        for s in range(0, b, batch_chunk):
+            size = min(batch_chunk, b - s)
+            piece = jax.tree_util.tree_map(
+                lambda x: x[s:s + batch_chunk], test)
+            pl, pm = per_node(piece)
+            wl = pl * (size / b)
+            wm = {k: v * (size / b) for k, v in pm.items()}
+            losses = wl if losses is None else losses + wl
+            metrics = wm if metrics is None \
+                else {k: metrics[k] + wm[k] for k in metrics}
+        return losses, metrics
     return evaluate
 
 
@@ -181,11 +224,12 @@ class DecentralizedRunner:
 
         @jax.jit
         def mix(params, w):
-            return apply_mixing(w, params)
+            return apply_mixing(w, params, chunk_d=cfg.mix_chunk_d)
 
         self._local_step = jax.jit(make_local_step(loss_fn, optimizer))
         self._mix = mix
-        self._evaluate = jax.jit(make_evaluator(eval_fn))
+        self._evaluate = jax.jit(
+            make_evaluator(eval_fn, batch_chunk=cfg.eval_batch_chunk))
 
     # ------------------------------------------------------------------
 
@@ -260,6 +304,8 @@ class DecentralizedRunner:
             mesh=mesh, collective=knobs.collective, net=self.cfg.net,
             chunk=knobs.chunk, engine=engine,
             sparse_mix=self.cfg.sparse_mix,
+            mix_chunk_d=self.cfg.mix_chunk_d,
+            eval_batch_chunk=self.cfg.eval_batch_chunk,
             params=self.params, opt_state=self.opt_state)
 
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None

@@ -16,36 +16,49 @@ import jax.numpy as jnp
 
 
 def _conv_init(key, shape, dtype=jnp.float32):
-    # shape = (h, w, c_in, c_out); He fan-in init
+    # shape = (h, w, c_in, c_out); He fan-in init.  Sampled in f32 and
+    # cast, so any storage dtype holds the same (rounded) draw — bf16
+    # params are exactly the f32 params rounded, never a different
+    # random stream.
     fan_in = shape[0] * shape[1] * shape[2]
     std = math.sqrt(2.0 / fan_in)
-    return jax.random.truncated_normal(key, -2.0, 2.0, shape,
-                                       jnp.float32) * std
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                    jnp.float32) * std
+    return w.astype(dtype)
 
 
 def cnn_params(key, *, in_channels: int = 3, num_classes: int = 10,
-               image_size: int = 32, width: int = 32) -> Dict:
+               image_size: int = 32, width: int = 32,
+               dtype=jnp.float32) -> Dict:
     """GN-LeNet: conv5x5(w) -> GN -> pool -> conv5x5(2w) -> GN -> pool ->
-    fc(num_classes)."""
+    fc(num_classes).  ``dtype`` is the storage dtype of every leaf (the
+    engines' bf16 exchange paths build bf16 models here)."""
     k1, k2, k3 = jax.random.split(key, 3)
     w2 = 2 * width
     feat = (image_size // 4) ** 2 * w2
     return {
-        "conv1": {"w": _conv_init(k1, (5, 5, in_channels, width)),
-                  "b": jnp.zeros((width,))},
-        "gn1": {"scale": jnp.ones((width,)), "bias": jnp.zeros((width,))},
-        "conv2": {"w": _conv_init(k2, (5, 5, width, w2)),
-                  "b": jnp.zeros((w2,))},
-        "gn2": {"scale": jnp.ones((w2,)), "bias": jnp.zeros((w2,))},
-        "fc": {"w": jax.random.truncated_normal(
+        "conv1": {"w": _conv_init(k1, (5, 5, in_channels, width), dtype),
+                  "b": jnp.zeros((width,), dtype)},
+        "gn1": {"scale": jnp.ones((width,), dtype),
+                "bias": jnp.zeros((width,), dtype)},
+        "conv2": {"w": _conv_init(k2, (5, 5, width, w2), dtype),
+                  "b": jnp.zeros((w2,), dtype)},
+        "gn2": {"scale": jnp.ones((w2,), dtype),
+                "bias": jnp.zeros((w2,), dtype)},
+        "fc": {"w": (jax.random.truncated_normal(
             k3, -2.0, 2.0, (feat, num_classes), jnp.float32)
-            / math.sqrt(feat),
-            "b": jnp.zeros((num_classes,))},
+            / math.sqrt(feat)).astype(dtype),
+            "b": jnp.zeros((num_classes,), dtype)},
     }
 
 
 def _group_norm(p, x, groups: int = 2, eps: float = 1e-5):
     b, h, w, c = x.shape
+    if c % groups:
+        raise ValueError(
+            f"group norm needs the channel count divisible by the group "
+            f"count: got {c} channels, {groups} groups (pick a CNN width "
+            f"that {groups} divides)")
     xg = x.reshape(b, h, w, groups, c // groups)
     mu = xg.mean(axis=(1, 2, 4), keepdims=True)
     var = xg.var(axis=(1, 2, 4), keepdims=True)

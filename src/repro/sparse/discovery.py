@@ -127,6 +127,11 @@ class SparseMorphStrategy:
     ``candidates=None`` defaults to ``min(n, 4k + 2)``; passing
     ``candidates >= n`` switches to the full-population candidate set
     (exact discovery, used by conformance tests).
+
+    ``sim_row_chunk`` bounds the Eq.-3 gathered-candidate buffer to that
+    many receiver rows at a time (``[chunk, c, D]`` instead of ``[n, c,
+    D]`` — the multi-MB-model memory knob).  Row chunking is
+    bitwise-invariant, so negotiated topologies do not depend on it.
     """
 
     in_graph = True
@@ -137,7 +142,8 @@ class SparseMorphStrategy:
     name = "sparse-morph"
 
     def __init__(self, n: int, k: int, candidates: int = None,
-                 beta: float = 5.0, delta_r: int = 5, seed: int = 0):
+                 beta: float = 5.0, delta_r: int = 5, seed: int = 0,
+                 sim_row_chunk: int = None):
         if k >= n:
             raise ValueError(f"k={k} must be < n={n}")
         self.n, self.k = n, k
@@ -146,6 +152,7 @@ class SparseMorphStrategy:
         self.beta = beta
         self.delta_r = delta_r
         self.seed = seed
+        self.sim_row_chunk = sim_row_chunk
         self.idx = jnp.asarray(_ring_bootstrap(n, k))
 
     def init_graph_state(self):
@@ -160,7 +167,8 @@ class SparseMorphStrategy:
             else:
                 cand, valid = gossip_candidates(self.seed, rnd, idx,
                                                 self.c)
-            sim = candidate_similarity(params, cand)
+            sim = candidate_similarity(params, cand,
+                                       row_chunk=self.sim_row_chunk)
             key = jax.random.fold_in(round_key(self.seed, rnd),
                                      STREAM_CAND_SELECT)
             return _select_topk(key, sim, valid, cand, self.k, self.beta)

@@ -36,7 +36,8 @@ def _flatten_leaf(leaf: jax.Array) -> jax.Array:
 
 
 def sparse_mix_rows(adj: SparseAdjacency, x: jax.Array,
-                    rows: Optional[jax.Array] = None) -> jax.Array:
+                    rows: Optional[jax.Array] = None,
+                    chunk_d: Optional[int] = None) -> jax.Array:
     """Mix one flat ``[n_src, D]`` leaf for the receivers named by
     ``adj``'s rows: ``out[i] = w_self[i] * x[rows[i]] + Σ_s w[i, s] *
     x[idx[i, s]]``.
@@ -46,25 +47,46 @@ def sparse_mix_rows(adj: SparseAdjacency, x: jax.Array,
     block while ``x`` is the gathered population, and ``rows`` the
     receivers' global indices — the per-row arithmetic is identical, so
     the sharded gather schedule matches single-device bit for bit.
+
+    ``chunk_d`` processes the feature axis in slices of that many
+    elements, bounding the gathered neighbor buffer at ``[m, k,
+    chunk_d]`` (it is ``[m, k, D]`` otherwise — the term that blows up
+    for multi-MB CNN layers).  The slot-axis reduction per output
+    element is untouched; in practice XLA may still fuse the self-term
+    add differently across chunk shapes (last-ulp), so chunked
+    trajectories are allclose — with identical negotiated edges — not
+    guaranteed bitwise like the dense tensordot chunking.
     """
-    xf = x.astype(jnp.float32)
-    own = xf if rows is None else xf[rows]
-    gathered = xf[adj.idx]                              # [m, k, D]
     wm = jnp.where(adj.mask, adj.w, 0.0)
-    acc = jnp.einsum("mk,mkd->md", wm, gathered,
-                     precision=jax.lax.Precision.HIGHEST)
-    acc = acc + adj.w_self[:, None] * own
-    return acc.astype(x.dtype)
+
+    def piece(xs: jax.Array) -> jax.Array:
+        xf = xs.astype(jnp.float32)
+        own = xf if rows is None else xf[rows]
+        gathered = xf[adj.idx]                          # [m, k, dc]
+        acc = jnp.einsum("mk,mkd->md", wm, gathered,
+                         precision=jax.lax.Precision.HIGHEST)
+        return acc + adj.w_self[:, None] * own
+
+    if chunk_d is None or x.shape[1] <= chunk_d:
+        return piece(x).astype(x.dtype)
+    pieces = [piece(x[:, s:s + chunk_d])
+              for s in range(0, x.shape[1], chunk_d)]
+    return jnp.concatenate(pieces, axis=1).astype(x.dtype)
 
 
 def sparse_mix_pytree(adj: SparseAdjacency, tree,
                       rows: Optional[jax.Array] = None,
-                      mix_flat=None):
+                      mix_flat=None,
+                      chunk_d: Optional[int] = None):
     """Apply :func:`sparse_mix_rows` leaf-wise over a node-stacked
     pytree (each leaf ``[n_src, ...]``), preserving leaf shapes and
     dtypes.  ``mix_flat`` overrides the flat-leaf mixer — the engine
-    passes the Pallas ``graph_mix_sparse`` kernel here."""
-    fn = mix_flat or sparse_mix_rows
+    passes the Pallas ``graph_mix_sparse`` kernel here (which does its
+    own feature blocking, so ``chunk_d`` only drives the XLA path)."""
+    if mix_flat is None:
+        fn = lambda a, f, r: sparse_mix_rows(a, f, r, chunk_d)
+    else:
+        fn = mix_flat
 
     def one(leaf):
         out = fn(adj, _flatten_leaf(leaf), rows)
@@ -74,7 +96,8 @@ def sparse_mix_pytree(adj: SparseAdjacency, tree,
     return jax.tree_util.tree_map(one, tree)
 
 
-def candidate_similarity(tree, cand: jax.Array) -> jax.Array:
+def candidate_similarity(tree, cand: jax.Array,
+                         row_chunk: Optional[int] = None) -> jax.Array:
     """Eq.-3 cosine similarity of every node against its ``[n, c]``
     candidate peers only: per-layer cosines averaged over layers (the
     same per-leaf structure as ``pairwise_model_similarity``), O(n·c·D)
@@ -82,19 +105,35 @@ def candidate_similarity(tree, cand: jax.Array) -> jax.Array:
 
     Returns ``[n, c]`` f32; entry ``(i, a)`` compares node i with node
     ``cand[i, a]``.
+
+    ``row_chunk`` processes receivers that many rows at a time so the
+    gathered candidate buffer is ``[row_chunk, c, D]`` instead of
+    ``[n, c, D]``.  Rows are independent (every cosine reduces over the
+    full feature axis of one pair), so row chunking is
+    bitwise-invariant — unlike feature-axis chunking, which would split
+    the D reduction and change its summation order.
     """
     leaves = jax.tree_util.tree_leaves(tree)
     if not leaves:
         raise ValueError("empty parameter pytree")
-    total = None
-    for leaf in leaves:
-        flat = _flatten_leaf(leaf).astype(jnp.float32)
-        cv = flat[cand]                                   # [n, c, D]
-        dots = jnp.einsum("nd,ncd->nc", flat, cv,
-                          precision=jax.lax.Precision.HIGHEST)
-        own = jnp.sqrt((flat * flat).sum(axis=1))         # [n]
-        peer = jnp.sqrt(jnp.einsum("ncd,ncd->nc", cv, cv,
-                                   precision=jax.lax.Precision.HIGHEST))
-        cos = dots / (own[:, None] * peer + _EPS)
-        total = cos if total is None else total + cos
-    return total / len(leaves)
+    n = cand.shape[0]
+    rc = n if row_chunk is None else min(row_chunk, n)
+
+    def block(s: int) -> jax.Array:
+        total = None
+        for leaf in leaves:
+            flat = _flatten_leaf(leaf).astype(jnp.float32)
+            fa = flat[s:s + rc]                           # [m, D]
+            cv = flat[cand[s:s + rc]]                     # [m, c, D]
+            dots = jnp.einsum("nd,ncd->nc", fa, cv,
+                              precision=jax.lax.Precision.HIGHEST)
+            own = jnp.sqrt((fa * fa).sum(axis=1))         # [m]
+            peer = jnp.sqrt(jnp.einsum("ncd,ncd->nc", cv, cv,
+                                       precision=jax.lax.Precision.HIGHEST))
+            cos = dots / (own[:, None] * peer + _EPS)
+            total = cos if total is None else total + cos
+        return total / len(leaves)
+
+    if rc >= n:
+        return block(0)
+    return jnp.concatenate([block(s) for s in range(0, n, rc)], axis=0)

@@ -1,0 +1,107 @@
+"""Non-IID partitioning (paper §IV-A1) — distribution and conservation.
+
+The count-conserving rounding fix is pinned two ways: a deterministic
+fixed-proportions case where floored cuts produce a *different* (and
+wrong) allocation, and a seed-pinned α=0.1 split so any future change to
+the partition arithmetic shows up as a diff against known-good counts.
+"""
+import numpy as np
+import pytest
+
+from repro.data import make_image_classification
+from repro.data.partition import (by_writer_partition, dirichlet_partition,
+                                  heterogeneity, label_distributions)
+
+
+class _FixedRng:
+    """Stand-in Generator: no shuffling, scripted Dirichlet draws —
+    makes the cut arithmetic fully deterministic."""
+
+    def __init__(self, props):
+        self.props = np.asarray(props, np.float64)
+
+    def shuffle(self, x):
+        pass
+
+    def dirichlet(self, alpha):
+        assert len(alpha) == len(self.props)
+        return self.props
+
+
+def test_cuts_are_round_not_floor():
+    """props [.24, .26, .26, .24] over 10 samples: rounded cumulative
+    cuts give [2, 3, 3, 2]; the old floor arithmetic gave [2, 3, 2, 3],
+    silently shifting a sample to the last node."""
+    labels = np.zeros(10, np.int64)
+    parts = dirichlet_partition(labels, 4, 1.0,
+                                _FixedRng([0.24, 0.26, 0.26, 0.24]),
+                                min_per_node=2)
+    assert [len(p) for p in parts] == [2, 3, 3, 2]
+
+
+def test_small_share_rounds_to_a_sample_not_zero():
+    """A 9% share of 10 samples is 1 sample under rounding; flooring
+    produced a zero-sample node (burning min_per_node retries at
+    α=0.1).  min_per_node=0 keeps the single draw visible."""
+    labels = np.zeros(10, np.int64)
+    parts = dirichlet_partition(labels, 4, 1.0,
+                                _FixedRng([0.09, 0.31, 0.30, 0.30]),
+                                min_per_node=0)
+    assert len(parts[0]) == 1
+
+
+def test_seed_pinned_alpha01_distribution():
+    """Known-good α=0.1 split: node sizes for this exact (dataset, seed)
+    pair.  Any change to the shuffle/draw/cut arithmetic diffs here."""
+    ds = make_image_classification(2000, num_classes=10, image_size=8,
+                                   seed=0)
+    parts = dirichlet_partition(ds.labels, 8, 0.1,
+                                np.random.default_rng(42))
+    assert [len(p) for p in parts] == [391, 74, 397, 99, 162, 211, 354,
+                                       312]
+
+
+@pytest.mark.parametrize("alpha", [0.1, 0.5, 10.0])
+def test_partition_conserves_and_is_disjoint(alpha):
+    ds = make_image_classification(1500, num_classes=6, image_size=8,
+                                   seed=1)
+    parts = dirichlet_partition(ds.labels, 7, alpha,
+                                np.random.default_rng(3))
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(ds.labels)
+    assert len(np.unique(allidx)) == len(ds.labels)
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_alpha_orders_heterogeneity():
+    """Smaller alpha = more severe non-IIDness (the paper's α=0.1 is the
+    hard end); sanity that the severity knob points the right way."""
+    ds = make_image_classification(3000, num_classes=10, image_size=8,
+                                   seed=0)
+    h = {a: heterogeneity(
+            ds.labels,
+            dirichlet_partition(ds.labels, 10, a,
+                                np.random.default_rng(0)), 10)
+         for a in (0.1, 1.0, 100.0)}
+    assert h[0.1] > h[1.0] > h[100.0]
+
+
+def test_min_per_node_failure_raises():
+    labels = np.zeros(4, np.int64)        # 4 samples cannot give 5 nodes
+    with pytest.raises(RuntimeError):     # >= 2 each
+        dirichlet_partition(labels, 5, 0.1, np.random.default_rng(0))
+
+
+def test_label_distributions_rows_sum_to_one():
+    ds = make_image_classification(800, num_classes=5, image_size=8,
+                                   seed=2)
+    parts = dirichlet_partition(ds.labels, 4, 0.5,
+                                np.random.default_rng(1))
+    dists = label_distributions(ds.labels, parts, 5)
+    np.testing.assert_allclose(dists.sum(axis=1), 1.0, atol=1e-9)
+
+
+def test_by_writer_needs_enough_writers():
+    with pytest.raises(ValueError):
+        by_writer_partition(np.zeros(10, np.int64), 3,
+                            np.random.default_rng(0))
