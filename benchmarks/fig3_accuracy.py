@@ -79,7 +79,8 @@ def _experiment(args, n: int):
 
 
 def _build(args, n: int, strategy_name: str, engine: str = "dense",
-           mix_chunk_d=None, devices=None, collective="gather"):
+           mix_chunk_d=None, devices=None, collective="gather",
+           compress="none"):
     from repro.dlrt import DecentralizedRunner, RunnerConfig
     from repro.models.cnn import cnn_loss, cnn_params
     from repro.optim import sgd
@@ -98,7 +99,7 @@ def _build(args, n: int, strategy_name: str, engine: str = "dense",
     stream, test = _experiment(args, n)
     rc = dict(n_nodes=n, rounds=args.rounds, eval_every=args.eval_every,
               seed=args.seed, compiled=True, engine=engine,
-              mix_chunk_d=mix_chunk_d,
+              mix_chunk_d=mix_chunk_d, compress=compress,
               eval_batch_chunk=args.eval_batch_chunk)
     if devices:
         rc.update(mesh_devices=devices, collective=collective)

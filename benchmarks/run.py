@@ -84,8 +84,8 @@ def main(argv=None):
     from . import (fig2_connectivity, fig3_accuracy, fig3_curves,
                    fig4_connectivity_levels, fig5_ablation, fig67_isolation,
                    fig8_async, fig9_superstep, fig10_sharded,
-                   fig11_fused_net, fig12_sparse, kernel_bench, roofline,
-                   table1_accuracy)
+                   fig11_fused_net, fig12_sparse, fig13_compress,
+                   kernel_bench, roofline, table1_accuracy)
 
     sections = [
         ("fig2", lambda: fig2_connectivity.main(
@@ -146,6 +146,20 @@ def main(argv=None):
             + (["--nodes", "100", "1000", "10000"] if args.full
                else ["--nodes", "24", "--hlo-devices", "2"] if args.smoke
                else ["--nodes", "64", "256", "--hlo-devices", "4"]))),
+        # Compressed-gossip frontier (accuracy vs wire/collective
+        # bytes); smoke keeps the fig3 smoke CNN shape but enough rounds
+        # for the within-2-points acceptance row to be meaningful.
+        ("fig13_compress", lambda: fig13_compress.main(
+            ["--nodes", "50", "--rounds", "150", "--eval-every", "25",
+             "--width", "8", "--image-size", "16", "--samples", "6000",
+             "--test-samples", "512", "--eval-batch-chunk", "128"]
+            if args.full
+            else ["--nodes", "8", "--rounds", "60", "--eval-every", "20",
+                  "--width", "4", "--image-size", "8",
+                  "--samples", "1500", "--test-samples", "288",
+                  "--eval-batch-chunk", "32"] if args.smoke
+            else ["--nodes", "16", "--rounds", "60",
+                  "--eval-every", "20"])),
         ("kernels", lambda: kernel_bench.main(
             ["--sizes", "65536"] if args.smoke else [])),
         ("roofline", lambda: roofline.main(["--csv"])),

@@ -1,0 +1,43 @@
+"""Compressed gossip: quantized + top-k model exchange with error
+feedback (DESIGN.md §13).
+
+Every engine transfers node-stacked parameter payloads; this package
+defines what those payloads look like *on the wire*:
+
+* :class:`CompressConfig` — the ``compress=`` knob's parsed form
+  (quantization kind, top-k fraction, error feedback), with a string
+  grammar (``"int8"``, ``"fp8"``, ``"topk0.25"``, ``"int8+topk0.1"``)
+  so ``RunnerConfig.compress`` stays a plain string in configs and
+  caches;
+* :func:`encode_payload` / :func:`decode_wire_tree` — the codec
+  contract: encode one node-stacked pytree into wire arrays (int8/fp8
+  values, int16/int32 top-k indices, f32 per-row scales), decode any
+  row-stacked wire back to f32.  Per-row ops only, so sharded encoding
+  of a row block is bitwise-identical to the same rows of a
+  single-device encode;
+* error feedback — the residual ``e`` rides in the scan carry; the
+  direct-coded step (:func:`encode_payload`) transmits ``b = params +
+  e`` and keeps ``e' = b - decode(b)``.  Both ``b - d`` and ``d + e'``
+  are **exact in f32** (Sterbenz for the quantizers, disjoint supports
+  for top-k), which is what the telescoping property tests pin
+  bitwise.  The engines themselves difference-code against a
+  reconstructed replica (:func:`encode_delta_payload`): the payload is
+  ``(params - hat) + e``, dropped top-k coordinates persist in the
+  replica gap instead of the residual (feeding them into both
+  double-counts — see its docstring), and ``e`` carries only the
+  transmitted coordinates' bounded quantization error;
+* :func:`wire_bytes_tree` — the analytic per-transfer byte count the
+  engines substitute for ``model_bytes`` in comm accounting and the
+  dense network model's serialization delay.
+"""
+from .codec import (DEFAULT_TOPK_FRAC, FP8_MAX, INT8_MAX, QUANT_KINDS,
+                    CompressConfig, decode_leaf, decode_wire_tree,
+                    encode_delta_payload, encode_leaf, encode_payload,
+                    leaf_wire_bytes, roundtrip_leaf, topk_k,
+                    wire_bytes_tree, zero_residual)
+
+__all__ = ["DEFAULT_TOPK_FRAC", "FP8_MAX", "INT8_MAX", "QUANT_KINDS",
+           "CompressConfig", "decode_leaf", "decode_wire_tree",
+           "encode_delta_payload", "encode_leaf", "encode_payload",
+           "leaf_wire_bytes", "roundtrip_leaf", "topk_k",
+           "wire_bytes_tree", "zero_residual"]

@@ -1,0 +1,363 @@
+"""Gossip payload codecs: int8 / fp8-e4m3 quantization, top-k
+sparsification, error feedback (DESIGN.md §13).
+
+All codecs operate row-wise on flat ``[rows, D]`` f32 arrays — one row
+per (node, ring-slot) payload — so the sharded engines can encode a
+local row block, ``all_gather`` the small wire arrays, and decode the
+gathered population bitwise-identically to a single-device encode of
+the same rows.
+
+**Exactness contract.** With payload ``b`` (f32) and decoded
+``d = decode(encode(b))``, the residual ``e' = b - d`` and the
+reconstruction ``d + e'`` are both exact in f32:
+
+* quantizers: ``|b - d| <= step/2`` with ``|d| >= step`` or ``d == 0``
+  per coordinate, so the subtraction is exact by the Sterbenz lemma
+  (and trivially when ``d == 0``); the reconstruction's true sum is
+  then exactly ``b``, itself representable;
+* top-k: kept coordinates are transmitted verbatim (``e' == 0``),
+  dropped coordinates keep their full value in the residual
+  (``d == 0``) — the supports are disjoint.
+
+``tests/test_compress.py`` pins both identities bitwise, which is what
+makes the error-feedback telescoping claim (sum of decoded payloads ==
+sum of transmitted payloads minus the outstanding residual) exact
+rather than statistical.
+
+One caveat: XLA backends flush f32 subnormals to zero, so the
+identities hold over the normal range (|x| = 0 or >= ~1.18e-38).  The
+engines are self-consistent regardless — every payload, residual and
+correction flows through the same flushing backend.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+# Largest finite float8_e4m3fn value (the OCP "fn" variant jax ships).
+FP8_MAX = 448.0
+QUANT_KINDS = ("none", "int8", "fp8")
+DEFAULT_TOPK_FRAC = 0.25
+# Widest leaf a 16-bit top-k index can address; larger leaves fall back
+# to int32 indices (both the arrays and the byte accounting).
+INT16_MAX_D = 32767
+
+
+@dataclass(frozen=True)
+class CompressConfig:
+    """Parsed form of the ``compress=`` knob.
+
+    ``quant`` picks the value codec (``"none"`` | ``"int8"`` |
+    ``"fp8"``), ``topk_frac`` keeps only that fraction of each leaf's
+    largest-magnitude coordinates per node (None = dense),
+    ``error_feedback`` carries the coding error into the next round's
+    payload, ``sim`` routes the Eq.-3 similarity / control traffic
+    through the decoded payload (sketched similarity on compressed
+    leaves) instead of the raw params, and ``gamma`` is the consensus
+    step size the engines apply to the replica correction
+    (CHOCO-SGD's γ) — ``None`` auto-resolves via
+    :meth:`consensus_gamma`.
+    """
+    quant: str = "none"
+    topk_frac: Optional[float] = None
+    error_feedback: bool = True
+    sim: bool = True
+    gamma: Optional[float] = None
+
+    def __post_init__(self):
+        if self.quant not in QUANT_KINDS:
+            raise ValueError(f"quant={self.quant!r} not in {QUANT_KINDS}")
+        if self.topk_frac is not None \
+                and not 0.0 < float(self.topk_frac) <= 1.0:
+            raise ValueError("topk_frac must be in (0, 1], got "
+                             f"{self.topk_frac!r}")
+        if self.gamma is not None and not 0.0 < float(self.gamma) <= 1.0:
+            raise ValueError(f"gamma must be in (0, 1], got "
+                             f"{self.gamma!r}")
+
+    @property
+    def consensus_gamma(self) -> float:
+        """The consensus step size the engines actually apply:
+        ``x_i <- params_i + gamma * sum_j W[i,j] (hat_j - hat_i)``.
+
+        Full-step consensus (γ = 1) is only stable when the replicas
+        track the models closely — quantizers alone keep the gap at
+        the step scale, but top-k leaves 1 - frac of every delta
+        outstanding, and chaining full corrections through such stale
+        replicas under-mixes then over-corrects (the Morph contest
+        collapses below frac = 0.5 at γ = 1).  CHOCO-SGD's remedy is a
+        damped consensus step scaled to the compression quality; the
+        auto default follows that shape, ``min(1, 2 * topk_frac)``, so
+        dense codecs keep the exact γ = 1 correction and top-k runs
+        damp proportionally to what they drop.
+        """
+        if self.gamma is not None:
+            return float(self.gamma)
+        if self.topk_frac is None:
+            return 1.0
+        return min(1.0, 2.0 * float(self.topk_frac))
+
+    @property
+    def enabled(self) -> bool:
+        """False for the identity codec — the engines treat a disabled
+        config exactly like ``compress="none"`` (no residual carry, no
+        extra ops, bitwise-identical HLO)."""
+        return self.quant != "none" or self.topk_frac is not None
+
+    def spec(self) -> str:
+        """Canonical string form (inverse of :meth:`parse`)."""
+        parts = [] if self.quant == "none" else [self.quant]
+        if self.topk_frac is not None:
+            parts.append(f"topk{self.topk_frac:g}")
+        if self.gamma is not None:
+            parts.append(f"gamma{self.gamma:g}")
+        return "+".join(parts) or "none"
+
+    @classmethod
+    def parse(cls, spec) -> "CompressConfig":
+        """``"none"`` | ``"int8"`` | ``"fp8"`` | ``"topk[frac]"`` |
+        ``"+"``-joined combinations (``"int8+topk0.25"``); an existing
+        :class:`CompressConfig` passes through.  ``"auto"`` must be
+        resolved by ``repro.tune`` before reaching here."""
+        if isinstance(spec, cls):
+            return spec
+        if spec is None:
+            return cls()
+        if not isinstance(spec, str):
+            raise TypeError("compress accepts a spec string or a "
+                            f"CompressConfig, got {type(spec).__name__}")
+        if spec == "auto":
+            raise TypeError('compress="auto" is resolved by repro.tune.'
+                            "resolve_knobs before the codec is built")
+        quant, frac, gamma = "none", None, None
+        for term in spec.split("+"):
+            term = term.strip()
+            if term in ("", "none"):
+                continue
+            if term in ("int8", "fp8"):
+                if quant != "none":
+                    raise ValueError(f"duplicate quantizer in {spec!r}")
+                quant = term
+            elif term.startswith("topk"):
+                if frac is not None:
+                    raise ValueError(f"duplicate top-k in {spec!r}")
+                tail = term[len("topk"):]
+                frac = float(tail) if tail else DEFAULT_TOPK_FRAC
+            elif term.startswith("gamma"):
+                if gamma is not None:
+                    raise ValueError(f"duplicate gamma in {spec!r}")
+                gamma = float(term[len("gamma"):])
+            else:
+                raise ValueError(
+                    f"unknown compress term {term!r} in {spec!r}; valid: "
+                    "none, int8, fp8, topk[frac], gamma[step]")
+        return cls(quant=quant, topk_frac=frac, gamma=gamma)
+
+
+def topk_k(d: int, frac: float) -> int:
+    """Static per-leaf keep count: at least one coordinate, at most all
+    of them."""
+    return max(1, min(d, int(round(frac * d))))
+
+
+def _idx_dtype(d: int):
+    return jnp.int16 if d <= INT16_MAX_D else jnp.int32
+
+
+def _quant_max(quant: str) -> float:
+    return INT8_MAX if quant == "int8" else FP8_MAX
+
+
+def encode_leaf(x2d: jax.Array, cfg: CompressConfig) -> Dict[str, jax.Array]:
+    """Encode one flat f32 ``[rows, d]`` payload into its wire arrays.
+
+    Wire fields (all row-stacked, so any row subset decodes
+    independently): ``v`` raw f32 values (quant off), ``q`` int8/fp8
+    codes, ``scale`` f32 per-row step base, ``idx`` int16/int32 kept
+    coordinates (top-k on).  The per-row scale is ``max|x| / qmax``;
+    zero rows encode to all-zero codes with scale 0 (decode is exact 0).
+    """
+    x2d = x2d.astype(jnp.float32)
+    d = x2d.shape[1]
+    wire: Dict[str, jax.Array] = {}
+    vals = x2d
+    if cfg.topk_frac is not None:
+        k = topk_k(d, cfg.topk_frac)
+        _, idx = jax.lax.top_k(jnp.abs(x2d), k)
+        vals = jnp.take_along_axis(x2d, idx, axis=1)
+        wire["idx"] = idx.astype(_idx_dtype(d))
+    if cfg.quant != "none":
+        qmax = _quant_max(cfg.quant)
+        # top-k keeps the max-|x| coordinate, so max|vals| == max|x2d|
+        # either way and the scale is top-k-invariant.
+        scale = jnp.max(jnp.abs(vals), axis=1) / qmax
+        safe = jnp.where(scale > 0, scale, 1.0)[:, None]
+        if cfg.quant == "int8":
+            q = jnp.clip(jnp.round(vals / safe),
+                         -INT8_MAX, INT8_MAX).astype(jnp.int8)
+        else:
+            q = (vals / safe).astype(jnp.float8_e4m3fn)
+        wire["q"] = q
+        wire["scale"] = scale
+    else:
+        wire["v"] = vals
+    return wire
+
+
+def decode_leaf(wire: Dict[str, jax.Array], d: int,
+                cfg: CompressConfig) -> jax.Array:
+    """Decode wire arrays back to a dense f32 ``[rows, d]`` payload.
+    Pure per-row elementwise/scatter ops — decoding a gathered wire row
+    is bitwise the sender's local decode of the same row."""
+    if cfg.quant != "none":
+        vals = wire["q"].astype(jnp.float32) * wire["scale"][:, None]
+    else:
+        vals = wire["v"]
+    if cfg.topk_frac is None:
+        return vals
+    rows = vals.shape[0]
+    idx = wire["idx"].astype(jnp.int32)
+    out = jnp.zeros((rows, d), jnp.float32)
+    return out.at[jnp.arange(rows)[:, None], idx].set(vals)
+
+
+def roundtrip_leaf(x2d: jax.Array, cfg: CompressConfig) -> jax.Array:
+    """``decode(encode(x))`` — defined as exactly that composition, so
+    every in-engine shortcut that skips materializing the wire is
+    bitwise the wire path by construction."""
+    x2d = x2d.astype(jnp.float32)
+    return decode_leaf(encode_leaf(x2d, cfg), x2d.shape[1], cfg)
+
+
+def _flat2d(leaf: jax.Array) -> jax.Array:
+    return leaf.reshape(leaf.shape[0], -1)
+
+
+def zero_residual(tree):
+    """Fresh error-feedback state: f32 zeros in every leaf's shape."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def encode_payload(tree, resid, cfg: CompressConfig):
+    """One error-feedback step over a node-stacked pytree.
+
+    Per leaf (f32 throughout): payload ``b = params + resid``, wire
+    ``= encode(b)``, decoded ``d = decode(wire)``, new residual
+    ``e' = b - d`` (see the module docstring for why both ``e'`` and
+    ``d + e'`` are exact).  Returns ``(wire_tree, decoded_tree,
+    new_resid_tree)``; ``decoded`` leaves are f32 in the original leaf
+    shapes.  With ``error_feedback=False`` the payload is the raw
+    params and the residual stays zero.
+    """
+    def one(leaf, r):
+        b = _flat2d(leaf).astype(jnp.float32)
+        if cfg.error_feedback:
+            b = b + _flat2d(r)
+        wire = encode_leaf(b, cfg)
+        dec = decode_leaf(wire, b.shape[1], cfg)
+        e = b - dec if cfg.error_feedback else _flat2d(r)
+        return wire, dec.reshape(leaf.shape), e.reshape(leaf.shape)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    rleaves = treedef.flatten_up_to(resid)
+    trips = [one(leaf, r) for leaf, r in zip(leaves, rleaves)]
+    wire = jax.tree_util.tree_unflatten(treedef, [t[0] for t in trips])
+    dec = jax.tree_util.tree_unflatten(treedef, [t[1] for t in trips])
+    new_r = jax.tree_util.tree_unflatten(treedef, [t[2] for t in trips])
+    return wire, dec, new_r
+
+
+def encode_delta_payload(tree, resid, cfg: CompressConfig):
+    """Difference-coded error-feedback step — the engines' hot path
+    (DESIGN.md §13): ``tree`` is the *replica delta* ``params - hat``,
+    not the raw params.
+
+    Identical to :func:`encode_payload` except for the residual update:
+    a top-k-**dropped** coordinate's error is *not* fed back.  Under
+    difference coding the dropped value already persists in the replica
+    gap — next round's delta contains it in full (CHOCO-SGD's implicit
+    memory) — so feeding it into the residual as well double-counts:
+    the payload of a chronically dropped coordinate grows linearly with
+    the rounds it stays dropped, and the eventual transmission
+    overshoots the replica past the model by the accumulated multiple
+    (an oscillator that collapses training).  The residual therefore
+    carries only the **transmitted** coordinates' quantization error,
+    which is bounded by step/2; quant-only codecs transmit every
+    coordinate, making this bitwise :func:`encode_payload`.
+    """
+    def one(leaf, r):
+        b = _flat2d(leaf).astype(jnp.float32)
+        if cfg.error_feedback:
+            b = b + _flat2d(r)
+        wire = encode_leaf(b, cfg)
+        dec = decode_leaf(wire, b.shape[1], cfg)
+        if not cfg.error_feedback:
+            e = _flat2d(r)
+        elif cfg.topk_frac is None:
+            e = b - dec
+        else:
+            rows = b.shape[0]
+            sent = jnp.zeros(b.shape, bool).at[
+                jnp.arange(rows)[:, None],
+                wire["idx"].astype(jnp.int32)].set(True)
+            e = jnp.where(sent, b - dec, 0.0)
+        return wire, dec.reshape(leaf.shape), e.reshape(leaf.shape)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    rleaves = treedef.flatten_up_to(resid)
+    trips = [one(leaf, r) for leaf, r in zip(leaves, rleaves)]
+    wire = jax.tree_util.tree_unflatten(treedef, [t[0] for t in trips])
+    dec = jax.tree_util.tree_unflatten(treedef, [t[1] for t in trips])
+    new_r = jax.tree_util.tree_unflatten(treedef, [t[2] for t in trips])
+    return wire, dec, new_r
+
+
+def decode_wire_tree(wire_tree, template_tree, cfg: CompressConfig):
+    """Decode a pytree of wire dicts back to f32 leaves shaped like
+    ``template_tree``'s trailing dims (the row count comes from the
+    wire — gathered/ring-flattened wires decode to more rows than the
+    template has)."""
+    def one(t, w):
+        d = _flat2d(t).shape[1]
+        dec = decode_leaf(w, d, cfg)
+        return dec.reshape((dec.shape[0],) + t.shape[1:])
+    return jax.tree_util.tree_map(one, template_tree, wire_tree)
+
+
+def leaf_wire_bytes(d: int, cfg: CompressConfig,
+                    dense_value_bytes: int = 4) -> int:
+    """Analytic per-node wire bytes for one leaf with ``d`` flattened
+    features — what the engines charge per transfer and feed to the
+    dense network model's serialization delay.
+
+    The top-k support is priced at the cheaper of its two standard
+    serializations: the explicit index list (2/4 B per kept
+    coordinate) or a packed position bitmap (``ceil(d / 8)`` — one bit
+    per coordinate, independent of k).  The bitmap wins for any
+    ``topk_frac > 1/16`` at int16 indices, so moderate sparsity still
+    prices well below dense f32 (e.g. int8+topk0.5: 0.5 B values +
+    0.125 B bitmap per coordinate ≈ 6.3x under 4 B dense).  The
+    in-memory wire arrays keep explicit indices either way — decode is
+    a gather — this prices what the transport would serialize.
+    """
+    if not cfg.enabled:
+        return dense_value_bytes * d
+    k = d if cfg.topk_frac is None else topk_k(d, cfg.topk_frac)
+    value_bytes = 4 if cfg.quant == "none" else 1
+    idx_total = 0
+    if cfg.topk_frac is not None:
+        idx_elt = 2 if d <= INT16_MAX_D else 4
+        idx_total = min(k * idx_elt, -(-d // 8))
+    scale_bytes = 0 if cfg.quant == "none" else 4
+    return k * value_bytes + idx_total + scale_bytes
+
+
+def wire_bytes_tree(params, n_nodes: int, cfg: CompressConfig) -> int:
+    """Per-transfer payload bytes for one node's slice of a node-stacked
+    pytree (the compressed counterpart of
+    ``dlrt.runtime.stacked_model_bytes``)."""
+    return sum(leaf_wire_bytes(leaf.size // n_nodes, cfg)
+               for leaf in jax.tree_util.tree_leaves(params))

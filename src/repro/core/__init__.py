@@ -16,7 +16,8 @@ from .topology import (random_regular_graph, random_out_regular,
                        connectivity_probability, TopologyState)
 from .mixing import (uniform_weights, metropolis_hastings_weights,
                      fully_connected_weights, uniform_weights_jax,
-                     apply_mixing, mix_numpy, is_row_stochastic,
+                     apply_mixing, apply_mixing_compressed,
+                     apply_consensus_correction, mix_numpy, is_row_stochastic,
                      is_doubly_stochastic)
 from .baselines import (TopologyStrategy, StaticStrategy,
                         FullyConnectedStrategy, EpidemicStrategy,
@@ -41,6 +42,7 @@ __all__ = [
     "comm_cost", "connectivity_probability", "TopologyState",
     "uniform_weights", "metropolis_hastings_weights",
     "fully_connected_weights", "uniform_weights_jax", "apply_mixing",
+    "apply_mixing_compressed", "apply_consensus_correction",
     "mix_numpy", "is_row_stochastic", "is_doubly_stochastic",
     "TopologyStrategy", "StaticStrategy", "FullyConnectedStrategy",
     "EpidemicStrategy", "InGraphMorphStrategy", "InGraphStaticStrategy",

@@ -132,6 +132,68 @@ def apply_mixing(w: jax.Array, stacked_params,
         stacked_params)
 
 
+def apply_consensus_correction(mixed, stacked_params, decoded,
+                               gamma: float = 1.0):
+    """Consensus-difference form of compressed mixing (DESIGN.md §13):
+    given ``mixed_i = sum_j W[i,j] decoded_j`` (the self row contracted
+    over its own *decoded* payload like everyone else's),
+
+        ``x_i <- params_i + gamma * (mixed_i - decoded_i)
+              =  params_i + gamma * sum_j W[i,j] (decoded_j - decoded_i)``
+
+    (unit row sums).  ``gamma`` is CHOCO-SGD's consensus step size: 1
+    takes the full correction (stable for dense codecs, whose replicas
+    track the models to quantization error), < 1 damps it (required
+    under aggressive top-k, where the replicas lag by the untransmitted
+    75%+ of every delta and full steps chase stale disagreements —
+    engines pass ``CompressConfig.consensus_gamma``).  Mixing applies only replica *differences* to the
+    full local model: where the replicas agree (e.g. a coordinate whose
+    deltas nobody has transmitted yet under top-k) ``params_i`` is left
+    untouched, instead of shrinking toward ``W[i,i] * params_i`` as
+    mixing raw sparse payloads would — that shrinkage is what breaks
+    training under top-k, and error feedback cannot undo it (it only
+    re-sends what was dropped, later).  ``decoded_i`` is the engine's
+    reconstructed replica of node i (``hat_i``, advanced by
+    difference coding — see ``CompiledSuperstep``); mathematically the
+    form reduces to the plain contraction ``W @ params`` when ``decoded
+    == params``, and an identity row (``W[i,:] = e_i``, e.g. an
+    isolated node) reconstructs ``params_i`` exactly up to the single
+    f32 rounding of ``decoded_i + (params_i - decoded_i)`` (bitwise
+    when ``decoded`` is a direct decode of ``params + resid``, by the
+    codec's residual identity).  ``mixed``/``decoded`` leaves are f32
+    and row-aligned with the local param block (sharded mode passes
+    each device's rows); the result casts back to the param leaf dtype.
+    """
+    g = float(gamma)
+
+    def one(m, p, dc):
+        m32 = m.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        if g == 1.0:
+            # Keep the γ = 1 association (mixed + (params - decoded)) so
+            # the damping knob cannot perturb existing full-step runs
+            # even at the rounding level.
+            return (m32 + (p32 - dc)).astype(p.dtype)
+        return (p32 + g * (m32 - dc)).astype(p.dtype)
+    return jax.tree_util.tree_map(one, mixed, stacked_params, decoded)
+
+
+def apply_mixing_compressed(w: jax.Array, stacked_params, decoded,
+                            chunk_d: Optional[int] = None,
+                            gamma: float = 1.0):
+    """Compressed-gossip mixing: the standard row-stochastic contraction
+    over the **decoded** payloads, then the consensus-difference
+    correction (:func:`apply_consensus_correction`, step size
+    ``gamma``).  Same f32/HIGHEST schedule and ``chunk_d`` semantics as
+    :func:`apply_mixing`; ``decoded`` leaves are the codec's f32
+    output, the result is cast to the param dtypes."""
+    w32 = w.astype(jnp.float32)
+    mixed = jax.tree_util.tree_map(
+        lambda leaf: tensordot_mix_leaf(w32, leaf, chunk_d), decoded)
+    return apply_consensus_correction(mixed, stacked_params, decoded,
+                                      gamma=gamma)
+
+
 def mix_numpy(w: np.ndarray, stacked: dict) -> dict:
     """Host-side mixing for the protocol simulator / tiny experiments."""
     out = {}

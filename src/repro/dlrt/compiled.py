@@ -88,8 +88,12 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core import apply_mixing
-from ..core.mixing import tensordot_mix_leaf, uniform_weights_jax
+from ..compress import (CompressConfig, decode_wire_tree,
+                        encode_delta_payload, wire_bytes_tree,
+                        zero_residual)
+from ..core import apply_mixing, apply_mixing_compressed
+from ..core.mixing import (apply_consensus_correction, tensordot_mix_leaf,
+                           uniform_weights_jax)
 from ..data.pipeline import DeviceDataStream, StackedBatcher
 from ..kernels import ops
 from ..optim import Optimizer
@@ -218,14 +222,28 @@ class CompiledSuperstep:
                  net=None, chunk: Optional[int] = None,
                  engine: str = "dense", sparse_mix: str = "exact",
                  mix_chunk_d: Optional[int] = None,
-                 eval_batch_chunk: Optional[int] = None):
+                 eval_batch_chunk: Optional[int] = None,
+                 compress: Optional[CompressConfig] = None):
         if isinstance(block_d, str) or isinstance(chunk, str) \
                 or isinstance(mix_chunk_d, str) \
-                or isinstance(eval_batch_chunk, str) or engine == "auto":
+                or isinstance(eval_batch_chunk, str) or engine == "auto" \
+                or isinstance(compress, str):
             raise TypeError(
                 "the engine takes concrete knobs; \"auto\" sentinels are "
                 "resolved by DecentralizedRunner via repro.tune."
-                "resolve_knobs before the engine is built")
+                "resolve_knobs (and compress specs parsed to "
+                "CompressConfig) before the engine is built")
+        # A disabled codec is exactly compress=None: no residual in the
+        # carry, no codec ops traced, bitwise-identical HLO — the
+        # conformance matrices pin this.
+        codec = compress if compress is not None and compress.enabled \
+            else None
+        if codec is not None and use_pallas:
+            raise ValueError(
+                "compressed gossip runs on the XLA mixing/similarity "
+                "paths; use_pallas=True is not supported with "
+                "compress != 'none' (the Pallas kernels read raw "
+                "params)")
         if not getattr(strategy, "in_graph", False):
             raise TypeError(
                 f"strategy {getattr(strategy, 'name', strategy)!r} has no "
@@ -256,6 +274,12 @@ class CompiledSuperstep:
                 "compat gather-mix (dense strategy through in-scan CSR "
                 "conversion) is a single-device numerics path; sharded "
                 "runs use sparse_mix='exact' or a sparse-native strategy")
+        if codec is not None and mesh is not None and not codec.sim:
+            raise ValueError(
+                "the sharded schedules move only the compressed wire "
+                "along the node axis, so control/similarity traffic "
+                "necessarily reads the decoded payload; "
+                "CompressConfig(sim=False) is a single-device knob")
         if data_stream is None and batcher is None:
             raise ValueError("need a host batcher or a data_stream")
         if net is not None and mesh is not None and collective != "gather":
@@ -293,6 +317,13 @@ class CompiledSuperstep:
         self._comm_bytes = 0
         self._model_bytes = cfg.model_bytes \
             or stacked_model_bytes(params, cfg.n_nodes)
+        # What one transfer costs on the wire: the codec's analytic byte
+        # count (DESIGN.md §13) — comm accounting and the dense network
+        # model's serialization delay both price this, not the dense
+        # f32 payload.
+        self.codec = codec
+        self._wire_bytes = self._model_bytes if codec is None \
+            else wire_bytes_tree(params, cfg.n_nodes, codec)
 
         # --- node-axis sharding layout -------------------------------------
         n = cfg.n_nodes
@@ -321,7 +352,10 @@ class CompiledSuperstep:
         self.net_stats: Optional[Dict] = None
         self.delivered_history: list = []
         if net is not None:
-            S = net.depth(self._model_bytes)
+            # Latency quantization prices the *wire* payload: a
+            # compressed transfer serializes faster, so the ring can be
+            # shallower than the uncompressed run's.
+            S = net.depth(self._wire_bytes)
             up_np, step_np = net.round_masks(cfg.rounds, n)
             self._net_S = S
             self._net_up = jnp.asarray(up_np)        # [rounds, n] bool
@@ -329,9 +363,23 @@ class CompiledSuperstep:
             # snapshot ring: leaf [n_pad, S, ...] — slot d holds the
             # post-step params from d rounds back (seeded with the
             # initial models); lhist [n, S] mirrors each node's
-            # last-completed-step round (-1 = never stepped).
+            # last-completed-step round (-1 = never stepped).  Under
+            # compression the ring holds the dense f32 **reconstructed
+            # replicas** (what peers hold after decoding every
+            # transmitted delta, DESIGN.md §13): slot s is hat_j as of
+            # s rounds back — on a reliable in-order transport that is
+            # exactly what a receiver of that stale payload has
+            # integrated, and slot 0 doubles as the replica the next
+            # round's delta is coded against.  Only the analytic wire
+            # bytes stay compressed (serialization delay + comm
+            # accounting); ring memory is dense f32.
+            if codec is None:
+                snap0 = self._params
+            else:
+                snap0 = jax.tree_util.tree_map(
+                    lambda x: x.astype(jnp.float32), self._params)
             hist = jax.tree_util.tree_map(
-                lambda x: jnp.repeat(x[:, None], S, axis=1), self._params)
+                lambda x: jnp.repeat(x[:, None], S, axis=1), snap0)
             lhist = jnp.full((n, S), -1, jnp.int32)
             if mesh is not None:
                 hist = jax.tree_util.tree_map(
@@ -345,6 +393,49 @@ class CompiledSuperstep:
         else:
             self._net_S = 0
             self._netstate = ()
+
+        # Error-feedback residual (DESIGN.md §13): f32 zeros shaped like
+        # the padded params, carried through the scan.  () when the
+        # codec is off — an empty pytree adds nothing to the carry, so
+        # the uncompressed program is structurally unchanged.
+        #
+        # hat: the CHOCO-SGD-style reconstructed replica.  Every node
+        # transmits ``encode((params - hat) + resid)`` and *everyone*
+        # (sender included) advances ``hat += decode(wire)``, so hat_i
+        # is bit-for-bit what each peer holds as node i's model and
+        # mixing contracts over these dense f32 replicas.  Coding the
+        # *difference* is what makes top-k trainable: an untransmitted
+        # coordinate leaves the replica (and, through the consensus
+        # correction, the local model) untouched instead of mixing in a
+        # zero, and the quantization scale tracks the SGD-step-sized
+        # delta rather than the weights themselves.  Seeded with the
+        # shared initial params (f32), like the residual it is () when
+        # the codec is off; in net mode the snapshot ring's slot 0 *is*
+        # the replica, so no separate hat is carried there either.
+        # Sharding: gather mode keeps hat replicated at full n_pad
+        # (receivers rebuild the whole decoded population as
+        # ``hat + decode(gathered wire)``, which becomes the next hat);
+        # psum mode only ever needs the local rows, so hat shards with
+        # the params.
+        if codec is None:
+            self._resid = ()
+            self._hat = ()
+        else:
+            resid = zero_residual(self._params)
+            hat = () if net is not None else jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.float32), self._params)
+            if mesh is not None:
+                resid = jax.tree_util.tree_map(
+                    lambda x: jax.device_put(
+                        x, NamedSharding(mesh, self._leaf_pspec(x))),
+                    resid)
+                hat_spec = (lambda x: P()) if collective == "gather" \
+                    else self._leaf_pspec
+                hat = jax.tree_util.tree_map(
+                    lambda x: jax.device_put(
+                        x, NamedSharding(mesh, hat_spec(x))), hat)
+            self._resid = resid
+            self._hat = hat
 
         self.gstate = strategy.init_graph_state()
         # Sparse-native strategies never consume the [n, n] similarity
@@ -446,9 +537,43 @@ class CompiledSuperstep:
                 lambda p, s: s,
                 params_logical, sim)
 
+        # --- compressed-gossip scan helpers (codec is not None only) -------
+        # comp(): one difference-coded error-feedback step over a
+        # node-stacked tree.  The wire carries ``encode((params - hat)
+        # + resid)`` and the returned ``decoded = hat + decode(wire)``
+        # is the advanced replica — what every peer now holds as these
+        # rows' models (and the next round's hat).  The residual only
+        # accumulates transmitted coordinates' quantization error;
+        # dropped top-k coordinates persist in the replica gap (see
+        # encode_delta_payload).  All ops are row-wise, so sharded row
+        # blocks encode/decode bitwise like the same rows on one
+        # device; decode_rows() turns a (gathered) wire back into dense
+        # f32 *delta* rows, to be added onto the matching hat rows.
+        def comp(params_tree, hat_tree, resid_tree):
+            delta = jax.tree_util.tree_map(
+                lambda p, h: p.astype(jnp.float32) - h,
+                params_tree, hat_tree)
+            wire, dec, new_resid = encode_delta_payload(delta, resid_tree,
+                                                        codec)
+            decoded = jax.tree_util.tree_map(jnp.add, hat_tree, dec)
+            return wire, decoded, new_resid
+
+        def decode_rows(wire_tree, template_tree):
+            return decode_wire_tree(wire_tree, template_tree, codec)
+
+        # Consensus step size (CHOCO's γ) — trace-time constant; 1.0 for
+        # dense codecs keeps the full correction bitwise, < 1 damps the
+        # replica-difference step under aggressive top-k.
+        gam = codec.consensus_gamma if codec is not None else 1.0
+
+        def slice_rows(tree, off):
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, off, n_local,
+                                                       0), tree)
+
         # --- dense-network scan helpers (net is not None only) -------------
         S = self._net_S
-        model_bytes = self._model_bytes
+        model_bytes = self._wire_bytes
 
         def net_select(mask, new, old):
             # per-node where over a state pytree; scalar leaves (shared
@@ -533,7 +658,7 @@ class CompiledSuperstep:
 
         def round_body(carry, xs):
             # Single-device body: identical to the pre-sharding engine.
-            params, opt_state, gstate, sim, netstate = carry
+            params, opt_state, gstate, sim, netstate, resid, hat = carry
             rnd, batch = xs
             new_p, new_o = local_step(params, opt_state, batch)
             if net is None:
@@ -542,11 +667,35 @@ class CompiledSuperstep:
                 up, step, stal, drop = net_masks(rnd)
                 params = net_select(step, new_p, params)
                 opt_state = net_select(step, new_o, opt_state)
+            if codec is not None:
+                # One codec step per round: what every peer (and, with
+                # codec.sim, the Eq.-3 control plane) sees this round is
+                # the advanced replica hat + decode(wire), never the raw
+                # params.  In net mode the ring's slot 0 (last round's
+                # push) is the replica the delta is coded against.
+                hat_prev = hat if net is None else \
+                    jax.tree_util.tree_map(lambda x: x[:, 0], netstate[0])
+                wire, decoded, resid = comp(params, hat_prev, resid)
+                if net is None:
+                    hat = decoded
             if sim_fn is not None:
-                sim = refresh_sim(rnd, params, sim)
+                sim_src = decoded if codec is not None and codec.sim \
+                    else params
+                sim = refresh_sim(rnd, sim_src, sim)
             gstate, edges, w = strategy.graph_round(gstate, rnd, sim)
             if net is None:
-                if engine == "sparse" and sparse_mix == "gather":
+                if codec is not None:
+                    if engine == "sparse" and sparse_mix == "gather":
+                        adj = dense_to_csr(edges, w.astype(jnp.float32),
+                                           compat_k)
+                        params = apply_consensus_correction(
+                            _sparse_mix(adj, decoded), params, decoded,
+                            gamma=gam)
+                    else:
+                        params = apply_mixing_compressed(
+                            w.astype(jnp.float32), params, decoded,
+                            chunk_d=mix_chunk_d, gamma=gam)
+                elif engine == "sparse" and sparse_mix == "gather":
                     # Compat numerics path: convert the dense round
                     # output to CSR in-scan and mix through the sparse
                     # gather contraction (parity-tested vs the dense
@@ -566,14 +715,25 @@ class CompiledSuperstep:
                 else:
                     params = apply_mixing(w.astype(jnp.float32), params,
                                           chunk_d=mix_chunk_d)
-                return (params, opt_state, gstate, sim, netstate), edges
-            netstate = net_push(params, netstate, rnd, step)
+                return (params, opt_state, gstate, sim, netstate,
+                        resid, hat), edges
+            netstate = net_push(decoded if codec is not None else params,
+                                netstate, rnd, step)
             delivered, d_idx, w_stal, stale_counts = net_effective(
                 edges, w, up, step, stal, drop)
             obs_sum = net_observed(rnd, netstate[1], d_idx, delivered)
-            params = net_mix(w_stal.reshape(n, n * S), netstate[0])
-            return (params, opt_state, gstate, sim, netstate), \
-                (edges, delivered, stale_counts, obs_sum)
+            if codec is None:
+                params = net_mix(w_stal.reshape(n, n * S), netstate[0])
+            else:
+                # The ring holds the dense f32 replicas; the same
+                # staleness-expanded contraction runs over them, then
+                # the consensus-difference correction against this
+                # round's own replica (slot 0 after the push).
+                mixed = net_mix(w_stal.reshape(n, n * S), netstate[0])
+                params = apply_consensus_correction(mixed, params,
+                                                    decoded, gamma=gam)
+            return (params, opt_state, gstate, sim, netstate, resid,
+                    hat), (edges, delivered, stale_counts, obs_sum)
 
         def pad_mask(m):
             # logical [n] bool -> [n_pad] (padded rows behave like the
@@ -597,8 +757,13 @@ class CompiledSuperstep:
             # Per-device net body: the snapshot ring is node-sharded like
             # the params and all_gathered once per round — its slot 0 is
             # this round's post-step population, so the Eq.-3 refresh
-            # reads it instead of a second params gather.
-            params, opt_state, gstate, sim, netstate = carry
+            # reads it instead of a second params gather.  Under the
+            # codec the ring carries the dense f32 replicas, so the
+            # gather moves dense snapshots either way (the codec's
+            # traffic claim lives in the analytic wire bytes that price
+            # delay and comm accounting, not in this schedule's
+            # collective — documented in DESIGN.md §13).
+            params, opt_state, gstate, sim, netstate, resid, hat = carry
             rnd, batch = xs
             new_p, new_o = local_step(params, opt_state, batch)
             up, step, stal, drop = net_masks(rnd)
@@ -606,7 +771,13 @@ class CompiledSuperstep:
                 pad_mask(step), shard_index() * n_local, n_local, 0)
             params = net_select(step_local, new_p, params)
             opt_state = net_select(step_local, new_o, opt_state)
-            netstate = net_push(params, netstate, rnd, step)
+            if codec is not None:
+                # Local rows' replica = ring slot 0 before the push.
+                hat_prev = jax.tree_util.tree_map(lambda x: x[:, 0],
+                                                  netstate[0])
+                wire, decoded, resid = comp(params, hat_prev, resid)
+            netstate = net_push(decoded if codec is not None else params,
+                                netstate, rnd, step)
             hist_full = gather_full(netstate[0])
             if sim_fn is not None:
                 logical = jax.tree_util.tree_map(lambda x: x[:n, 0],
@@ -618,22 +789,52 @@ class CompiledSuperstep:
             obs_sum = net_observed(rnd, netstate[1], d_idx, delivered)
             w_rows = jax.lax.dynamic_slice_in_dim(
                 embed_w_stal(w_stal), shard_index() * n_local, n_local, 0)
-            params = net_mix(w_rows, hist_full)
-            return (params, opt_state, gstate, sim, netstate), \
-                (edges, delivered, stale_counts, obs_sum)
+            if codec is None:
+                params = net_mix(w_rows, hist_full)
+            else:
+                mixed = net_mix(w_rows, hist_full)
+                params = apply_consensus_correction(mixed, params,
+                                                    decoded, gamma=gam)
+            return (params, opt_state, gstate, sim, netstate, resid,
+                    hat), (edges, delivered, stale_counts, obs_sum)
 
         def round_body_sharded(carry, xs):
             # Per-device body under shard_map: params/opt_state/batch are
             # the device's [n_local, ...] shard; gstate/sim/edges stay
-            # replicated at logical n.
+            # replicated at logical n.  Under the codec the gather
+            # collective moves the wire arrays instead of the dense
+            # params — the node-axis traffic is the compressed payload.
             if net is not None:
                 return round_body_sharded_net(carry, xs)
-            params, opt_state, gstate, sim, netstate = carry
+            params, opt_state, gstate, sim, netstate, resid, hat = carry
             rnd, batch = xs
             params, opt_state = local_step(params, opt_state, batch)
-            full = gather_full(params) if collective == "gather" else None
-            if sim_fn is not None and full is not None:
-                logical = jax.tree_util.tree_map(lambda x: x[:n], full)
+            full = decoded_full = None
+            if codec is not None:
+                if collective == "gather":
+                    # hat is carried replicated at full n_pad: encode
+                    # the own rows' delta against its matching slice,
+                    # gather the wire, and rebuild the whole decoded
+                    # population as hat + decode(gathered deltas) —
+                    # which is the next round's hat.  Row-wise codec
+                    # ops, so the gathered decode is bitwise the
+                    # senders' local decode of the same rows.
+                    off = shard_index() * n_local
+                    wire, decoded, resid = comp(
+                        params, slice_rows(hat, off), resid)
+                    decoded_full = jax.tree_util.tree_map(
+                        jnp.add, hat, decode_rows(gather_full(wire),
+                                                  params))
+                    hat = decoded_full
+                else:
+                    # psum mode only ever needs the local rows' replica.
+                    wire, decoded, resid = comp(params, hat, resid)
+                    hat = decoded
+            elif collective == "gather":
+                full = gather_full(params)
+            if sim_fn is not None and collective == "gather":
+                src = decoded_full if codec is not None else full
+                logical = jax.tree_util.tree_map(lambda x: x[:n], src)
                 sim = refresh_sim(rnd, logical, sim)
             elif sim_fn is not None:
                 # psum mode has no standing gather; pull the population in
@@ -641,9 +842,19 @@ class CompiledSuperstep:
                 # so every device takes the same branch and the collective
                 # stays well-formed).
                 def psum_mode_refresh(p, s):
-                    logical = jax.tree_util.tree_map(
-                        lambda x: jax.lax.all_gather(
-                            x, axes, axis=0, tiled=True)[:n], p)
+                    if codec is not None:
+                        # The replicas are dense f32, so this refresh
+                        # gather costs dense bytes — a sim_every-gated
+                        # control-plane cost, not the per-round data
+                        # plane (DESIGN.md §13).
+                        logical = jax.tree_util.tree_map(
+                            lambda x: jax.lax.all_gather(
+                                x, axes, axis=0, tiled=True)[:n],
+                            decoded)
+                    else:
+                        logical = jax.tree_util.tree_map(
+                            lambda x: jax.lax.all_gather(
+                                x, axes, axis=0, tiled=True)[:n], p)
                     return sim_fn(logical).astype(jnp.float32)
                 sim = jax.lax.cond(rnd % cfg.sim_every == 0,
                                    psum_mode_refresh,
@@ -653,25 +864,52 @@ class CompiledSuperstep:
             if collective == "gather":
                 w_rows = jax.lax.dynamic_slice_in_dim(
                     w_pad, shard_index() * n_local, n_local, 0)
-                params = mix_rows(w_rows, full)
+                if codec is None:
+                    params = mix_rows(w_rows, full)
+                else:
+                    mixed = mix_rows(w_rows, decoded_full)
+                    params = apply_consensus_correction(mixed, params,
+                                                        decoded, gamma=gam)
             else:
                 w_cols = jax.lax.dynamic_slice_in_dim(
                     w_pad, shard_index() * n_local, n_local, 1)
-                params = mix_psum(w_cols, params)
-            return (params, opt_state, gstate, sim, netstate), edges
+                if codec is None:
+                    params = mix_psum(w_cols, params)
+                else:
+                    # Contributions (including the self partial) come
+                    # from the decoded payload; the consensus correction
+                    # restores the exact local model after the reduce.
+                    # The collective itself still moves f32 partials —
+                    # compression shrinks the psum schedule's memory, not
+                    # its collective bytes (documented in DESIGN.md §13).
+                    mixed = mix_psum(w_cols, decoded)
+                    params = apply_consensus_correction(mixed, params,
+                                                        decoded, gamma=gam)
+            return (params, opt_state, gstate, sim, netstate, resid,
+                    hat), edges
 
         def round_body_sparse(carry, xs):
             # Sparse-native single-device body: the strategy returns CSR
             # adjacency directly and mixing is the O(n·k·D) gather
             # contraction — no [n, n] matrix is ever materialized.
-            params, opt_state, gstate, sim, netstate = carry
+            params, opt_state, gstate, sim, netstate, resid, hat = carry
             rnd, batch = xs
             params, opt_state = local_step(params, opt_state, batch)
+            if codec is not None:
+                wire, decoded, resid = comp(params, hat, resid)
+                hat = decoded
+                ctrl_src = decoded if codec.sim else params
+            else:
+                ctrl_src = params
             gstate, adj = strategy.graph_round(
-                gstate, rnd, params if needs_params else None)
-            params = _sparse_mix(adj, params)
-            return (params, opt_state, gstate, sim, netstate), \
-                (adj.idx, adj.mask)
+                gstate, rnd, ctrl_src if needs_params else None)
+            if codec is None:
+                params = _sparse_mix(adj, params)
+            else:
+                params = apply_consensus_correction(
+                    _sparse_mix(adj, decoded), params, decoded, gamma=gam)
+            return (params, opt_state, gstate, sim, netstate, resid,
+                    hat), (adj.idx, adj.mask)
 
         def sparse_mix_psum(apad, local, off):
             # Push / reduce-scatter schedule: each device accumulates its
@@ -679,7 +917,9 @@ class CompiledSuperstep:
             # ([n_pad, D] partial), psum_scatters that partial down to
             # its own receiver block, then adds the self term locally —
             # collective result bytes are n_pad·D / num_devices per leaf
-            # and compute stays O(n·k·D).
+            # and compute stays O(n·k·D).  Compressed runs pass the
+            # decoded payload as ``local``; the consensus correction
+            # outside restores the exact local model.
             local_w = jnp.where(
                 apad.mask & (apad.idx >= off) & (apad.idx < off + n_local),
                 apad.w, 0.0)
@@ -712,28 +952,55 @@ class CompiledSuperstep:
         def round_body_sharded_sparse(carry, xs):
             # Per-device sparse body: gstate and the CSR round output stay
             # replicated at logical n; only the params move, and only to
-            # the extent the schedule needs them.
-            params, opt_state, gstate, sim, netstate = carry
+            # the extent the schedule needs them.  Under the codec the
+            # standing gather moves the wire arrays (encoded deltas);
+            # receivers rebuild the decoded population from the
+            # replicated hat.
+            params, opt_state, gstate, sim, netstate, resid, hat = carry
             rnd, batch = xs
             params, opt_state = local_step(params, opt_state, batch)
             off = shard_index() * n_local
-            full = gather_full(params) if collective == "gather" else None
+            if codec is not None:
+                hat_own = slice_rows(hat, off) \
+                    if collective == "gather" else hat
+                wire, decoded, resid = comp(params, hat_own, resid)
+            full = full_dec = None
+            if collective == "gather":
+                if codec is None:
+                    full = gather_full(params)
+                else:
+                    full_dec = jax.tree_util.tree_map(
+                        jnp.add, hat, decode_rows(gather_full(wire),
+                                                  params))
+                    hat = full_dec
+            elif codec is not None:
+                hat = decoded
             if not needs_params:
                 ctrl = None
             elif collective == "gather":
-                ctrl = jax.tree_util.tree_map(lambda x: x[:n], full)
+                src = full_dec if codec is not None else full
+                ctrl = jax.tree_util.tree_map(lambda x: x[:n], src)
             else:
                 # psum mode has no standing gather; pull the population
                 # in only on negotiation rounds (the replicated predicate
                 # keeps the collective well-formed, exactly like
-                # psum_mode_refresh above).
+                # psum_mode_refresh above).  Under the codec the dense
+                # f32 replicas are gathered — a ctrl_every-gated
+                # control-plane cost (DESIGN.md §13).
                 def ctrl_gather(p):
+                    if codec is not None:
+                        return jax.tree_util.tree_map(
+                            lambda x: jax.lax.all_gather(
+                                x, axes, axis=0, tiled=True)[:n],
+                            decoded)
                     return jax.tree_util.tree_map(
                         lambda x: jax.lax.all_gather(
                             x, axes, axis=0, tiled=True)[:n], p)
                 def ctrl_hold(p):
                     return jax.tree_util.tree_map(
-                        lambda x: jnp.zeros((n,) + x.shape[1:], x.dtype),
+                        lambda x: jnp.zeros((n,) + x.shape[1:],
+                                            jnp.float32 if codec is not None
+                                            else x.dtype),
                         p)
                 ctrl = jax.lax.cond(rnd % ctrl_every == 0, ctrl_gather,
                                     ctrl_hold, params)
@@ -745,11 +1012,20 @@ class CompiledSuperstep:
                 adj_l = SparseAdjacency(sl(apad.idx), sl(apad.w),
                                         sl(apad.w_self), sl(apad.mask))
                 rows = off + jnp.arange(n_local, dtype=jnp.int32)
-                params = _sparse_mix(adj_l, full, rows=rows)
-            else:
+                if codec is None:
+                    params = _sparse_mix(adj_l, full, rows=rows)
+                else:
+                    params = apply_consensus_correction(
+                        _sparse_mix(adj_l, full_dec, rows=rows),
+                        params, decoded, gamma=gam)
+            elif codec is None:
                 params = sparse_mix_psum(apad, params, off)
-            return (params, opt_state, gstate, sim, netstate), \
-                (adj.idx, adj.mask)
+            else:
+                params = apply_consensus_correction(
+                    sparse_mix_psum(apad, decoded, off), params, decoded,
+                    gamma=gam)
+            return (params, opt_state, gstate, sim, netstate, resid,
+                    hat), (adj.idx, adj.mask)
 
         if sparse_native:
             body = round_body_sharded_sparse if sharded \
@@ -779,7 +1055,13 @@ class CompiledSuperstep:
                 jax.tree_util.tree_map(self._leaf_pspec, self._opt_state),
                 jax.tree_util.tree_map(lambda _: P(), self.gstate),
                 P(),
-                net_specs)
+                net_specs,
+                jax.tree_util.tree_map(self._leaf_pspec, self._resid),
+                # gather mode carries the full replicated hat; psum mode
+                # shards it with the params (see the hat init above).
+                jax.tree_util.tree_map(
+                    (lambda _: P()) if collective == "gather"
+                    else self._leaf_pspec, self._hat))
             if sparse_native:
                 self._ys_specs = (P(), P())   # (idx, mask), replicated
             else:
@@ -899,7 +1181,7 @@ class CompiledSuperstep:
         k = chunk or self.chunk or self.cfg.eval_every
         rnds = jnp.arange(start, start + k)
         carry = (self._params, self._opt_state, self.gstate, self.sim,
-                 self._netstate)
+                 self._netstate, self._resid, self._hat)
         if self.stream is None:
             batches = self._prefetch_batches(k)
             lowered = self._get_superstep(batches).lower(
@@ -916,7 +1198,7 @@ class CompiledSuperstep:
         k = end - start + 1
         rnds = jnp.arange(start, end + 1)
         carry = (self._params, self._opt_state, self.gstate, self.sim,
-                 self._netstate)
+                 self._netstate, self._resid, self._hat)
         if self.stream is None:
             batches = self._prefetch_batches(k)
             fn = self._get_superstep(batches)
@@ -925,14 +1207,14 @@ class CompiledSuperstep:
             fn = self._get_superstep(None)
             carry, ys = fn(carry, rnds, *self._stream_args)
         (self._params, self._opt_state, self.gstate, self.sim,
-         self._netstate) = carry
+         self._netstate, self._resid, self._hat) = carry
         if hasattr(self.strategy, "set_graph_state"):
             self.strategy.set_graph_state(self.gstate, self.sim)
         if self.sparse_native:
             # CSR scan output: [K, n, k] sender indices + validity mask.
             idx_np = np.asarray(ys[0], np.int32)
             mask_np = np.asarray(ys[1], bool)
-            self._comm_bytes += int(mask_np.sum()) * self._model_bytes
+            self._comm_bytes += int(mask_np.sum()) * self._wire_bytes
             self._last_isolated = int((~mask_np[-1].any(axis=1)).sum())
             nn = self.cfg.n_nodes
             if nn > SPARSE_EDGE_DECODE_MAX:
@@ -949,7 +1231,7 @@ class CompiledSuperstep:
         if self.net is None:
             edges_np = np.asarray(ys, bool)
             self.edge_history.extend(edges_np)
-            self._comm_bytes += int(edges_np.sum()) * self._model_bytes
+            self._comm_bytes += int(edges_np.sum()) * self._wire_bytes
             return edges_np
         # net mode: decode (negotiated, delivered, staleness) stacks —
         # comm bytes count the transfers that actually arrived, exactly
@@ -960,7 +1242,7 @@ class CompiledSuperstep:
         self.edge_history.extend(edges_np)
         self.delivered_history.extend(delivered_np)
         n_del = int(delivered_np.sum())
-        self._comm_bytes += n_del * self._model_bytes
+        self._comm_bytes += n_del * self._wire_bytes
         self.net_stats["delivered"] += n_del
         self.net_stats["dropped"] += int(edges_np.sum()) - n_del
         self.net_stats["staleness_hist"] += \

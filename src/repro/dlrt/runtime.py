@@ -102,6 +102,17 @@ class RunnerConfig:
     # compiled engine (an in-graph strategy) and, when sharded,
     # collective="gather".
     net: Optional[object] = None
+    # Compressed gossip (repro.compress, DESIGN.md §13): what every
+    # model transfer carries on the wire.  "none" (default, bitwise-
+    # identical to the pre-compression engines), a codec spec string —
+    # "int8" | "fp8" | "topk[frac]" | combinations like "int8+topk0.25"
+    # — a repro.compress.CompressConfig, or "auto" (resolved through
+    # the repro.tune cache like the other knobs).  Error-feedback
+    # residuals ride in the scan carry; comm-byte accounting and the
+    # dense network model's serialization delay switch to the analytic
+    # wire bytes.  Requires the compiled engine and the XLA mixing
+    # paths (use_pallas=False).
+    compress: object = "none"
 
 
 def make_local_step(loss_fn: Callable, optimizer: Optimizer) -> Callable:
@@ -276,11 +287,13 @@ class DecentralizedRunner:
         cache; the concrete values land in ``self.resolved_knobs``
         (DESIGN.md §10).
         """
+        from ..compress import CompressConfig
         from ..launch.mesh import make_superstep_mesh
         from ..tune import AUTO, resolve_knobs
         from .compiled import CompiledSuperstep
         knobs = resolve_knobs(self.cfg, self.params)
         self.resolved_knobs = knobs
+        codec = CompressConfig.parse(knobs.compress)
         engine = knobs.engine
         if self.cfg.engine == AUTO and getattr(self.strategy, "sparse",
                                                False):
@@ -306,6 +319,7 @@ class DecentralizedRunner:
             sparse_mix=self.cfg.sparse_mix,
             mix_chunk_d=self.cfg.mix_chunk_d,
             eval_batch_chunk=self.cfg.eval_batch_chunk,
+            compress=codec,
             params=self.params, opt_state=self.opt_state)
 
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
@@ -341,6 +355,17 @@ class DecentralizedRunner:
                 "requires the compiled superstep engine — use an "
                 "in-graph strategy, or the event-driven "
                 "repro.netsim.AsyncRunner for host-path network runs")
+        comp = self.cfg.compress
+        if comp is not None and comp != "none":
+            from ..compress import CompressConfig
+            if comp == "auto" or not isinstance(comp, CompressConfig) \
+                    or comp.enabled:
+                raise TypeError(
+                    "RunnerConfig.compress (compressed gossip) carries "
+                    "its error-feedback residual in the scan state and "
+                    "requires the compiled superstep engine — use an "
+                    "in-graph strategy, or compress='none' for the "
+                    "per-round host loop")
         if hasattr(self.batcher, "draw"):
             raise TypeError(
                 "DeviceDataStream draws batches inside the compiled scan; "

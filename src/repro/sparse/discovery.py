@@ -31,6 +31,13 @@ Strategies here implement the in-graph contract's **sparse variant**:
 SparseAdjacency)`` — the engine passes node-stacked params (the sparse
 control plane needs models, not a dense sim cache) and receives CSR
 adjacency instead of ``(edges, w)``.
+
+Under a gossip codec (``compress=`` with ``sim=True``, DESIGN.md §13)
+the engine hands *decoded* payloads to ``graph_round`` /
+``candidate_similarity`` instead of the raw params: similarity is
+sketched on exactly what peers would receive over the wire, so control
+decisions stay consistent with the compressed data plane and cost no
+extra traffic.
 """
 from __future__ import annotations
 

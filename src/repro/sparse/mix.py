@@ -47,6 +47,9 @@ def sparse_mix_rows(adj: SparseAdjacency, x: jax.Array,
     block while ``x`` is the gathered population, and ``rows`` the
     receivers' global indices — the per-row arithmetic is identical, so
     the sharded gather schedule matches single-device bit for bit.
+    Compressed gossip (DESIGN.md §13) passes the decoded wire payloads
+    as ``x`` and applies the consensus-difference correction outside
+    (``repro.core.mixing.apply_consensus_correction``).
 
     ``chunk_d`` processes the feature axis in slices of that many
     elements, bounding the gathered neighbor buffer at ``[m, k,

@@ -60,6 +60,9 @@ class TuneEntry:
     candidates: Optional[int] = None     # sparse candidate-set size
                                          # (recorded; a strategy knob,
                                          # not an engine argument)
+    compress: str = "none"               # gossip codec spec
+                                         # (DESIGN.md §13); resolves
+                                         # compress="auto"
     seconds_per_round: Optional[float] = None   # stage-2 measurement
     tuned: Dict[str, object] = field(default_factory=dict)  # provenance
                                          # (jax version, candidate count)

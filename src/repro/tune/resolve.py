@@ -27,6 +27,9 @@ class ResolvedKnobs:
     chunk: Optional[int]
     source: str
     engine: str = "dense"
+    # compress spec string (or a CompressConfig passed through from an
+    # explicit RunnerConfig); parsed by the runner after resolution.
+    compress: object = "none"
 
 
 def shape_of(cfg, params) -> TuneShape:
@@ -61,13 +64,14 @@ def resolve_knobs(cfg, params,
     shape slower than before.
     """
     engine = getattr(cfg, "engine", "dense")
+    compress = getattr(cfg, "compress", "none")
     autos = (cfg.block_d == AUTO, cfg.collective == AUTO,
-             cfg.chunk == AUTO, engine == AUTO)
+             cfg.chunk == AUTO, engine == AUTO, compress == AUTO)
     if not any(autos):
         return ResolvedKnobs(block_d=cfg.block_d,
                              collective=cfg.collective,
                              chunk=cfg.chunk, source="explicit",
-                             engine=engine)
+                             engine=engine, compress=compress)
     shape = shape_of(cfg, params)
     if cache is None:
         cache = load_default_cache()
@@ -80,4 +84,5 @@ def resolve_knobs(cfg, params,
         collective=e.collective if autos[1] else cfg.collective,
         chunk=e.chunk if autos[2] else cfg.chunk,
         source=source,
-        engine=e.engine if autos[3] else engine)
+        engine=e.engine if autos[3] else engine,
+        compress=e.compress if autos[4] else compress)

@@ -26,6 +26,9 @@ DEFAULT_BLOCK_DS = (128, 256, 512)
 # Candidate-set sizes for sparse-engine candidates (None = the
 # strategy's own default, min(n, 4k + 2)).
 DEFAULT_SPARSE_CANDIDATES = (None, 16)
+# Gossip codec specs joined into the grid (DESIGN.md §13); "none" must
+# stay first so the uncompressed engine is always a candidate.
+DEFAULT_COMPRESS = ("none", "int8", "int8+topk0.25")
 
 
 @dataclass(frozen=True)
@@ -41,6 +44,7 @@ class Candidate:
     use_pallas: bool = False
     engine: str = "dense"
     candidates: Optional[int] = None
+    compress: str = "none"
 
     def label(self) -> str:
         """Short human-readable tag for logs and cache provenance."""
@@ -50,6 +54,8 @@ class Candidate:
             parts.append(f"{self.engine}(c={c})")
         if self.use_pallas:
             parts.append(f"pallas(block_d={self.block_d})")
+        if self.compress != "none":
+            parts.append(self.compress)
         return "/".join(parts)
 
 
@@ -59,7 +65,9 @@ def candidate_space(shape: TuneShape, *,
                     include_pallas: Optional[bool] = None,
                     include_sparse: bool = True,
                     sparse_candidates: Sequence[Optional[int]]
-                    = DEFAULT_SPARSE_CANDIDATES) -> List[Candidate]:
+                    = DEFAULT_SPARSE_CANDIDATES,
+                    compress_options: Sequence[str]
+                    = DEFAULT_COMPRESS) -> List[Candidate]:
     """Deterministically ordered candidates for ``shape`` (see module
     docstring for the gating rules).
 
@@ -67,6 +75,8 @@ def candidate_space(shape: TuneShape, *,
     join the grid so ``"auto"`` resolution can pick the dense/sparse
     crossover per shape — the dense network model (``net > 0``) gates
     them out, since the sparse engine has no in-scan netsim path yet.
+    Compress candidates (``compress_options`` beyond ``"none"``) join
+    only on the XLA kernel path — the engine rejects codec + Pallas.
     """
     if include_pallas is None:
         include_pallas = shape.backend == "tpu"
@@ -81,8 +91,9 @@ def candidate_space(shape: TuneShape, *,
     if include_sparse and shape.net == 0:
         engines += [("sparse", cc) for cc in sparse_candidates]
     return [Candidate(chunk=c, collective=col, block_d=bd, use_pallas=up,
-                      engine=eng, candidates=cc)
+                      engine=eng, candidates=cc, compress=comp)
             for c in chunks
             for col in collectives
             for up, bd in kernel_paths
-            for eng, cc in engines]
+            for eng, cc in engines
+            for comp in (compress_options if not up else ("none",))]

@@ -64,6 +64,7 @@ class TuneResult:
             block_d=self.best.block_d, collective=self.best.collective,
             chunk=self.best.chunk, use_pallas=self.best.use_pallas,
             engine=self.best.engine, candidates=self.best.candidates,
+            compress=self.best.compress,
             seconds_per_round=self.seconds_per_round.get(self.best),
             tuned={"candidates": len(self.stage1_scores),
                    "survivors": len(self.survivors), **tuned})

@@ -70,6 +70,7 @@ def mlp_runner_factory(n: int, *, batch: int = 4, rounds: int = 10 ** 9,
                 interpret=cand.use_pallas and interpret_on,
                 block_d=cand.block_d, collective=cand.collective,
                 chunk=cand.chunk, engine=cand.engine,
+                compress=cand.compress,
                 mesh_devices=mesh_devices, net=net))
 
     return make_runner

@@ -370,3 +370,82 @@ def _parse_result(proc):
             if ln.startswith("RESULT")][0]
     parts = dict(p.split("=") for p in line.split()[1:])
     return float(parts["dense"]), float(parts["sparse"])
+
+
+# ---------------------------------------------------------------------------
+# Compressed gossip through the sparse engine (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(_sparse_strategies()))
+def test_compress_none_bitwise_sparse(name):
+    """compress="none" is bitwise the pre-codec sparse engine: a
+    disabled codec contributes an empty residual to the scan carry and
+    traces no codec ops."""
+    ref = _runner(_sparse_strategies()[name](), engine="sparse")
+    ref.run()
+    non = _runner(_sparse_strategies()[name](), engine="sparse",
+                  compress="none")
+    non.run()
+    _assert_bitwise(ref, non)
+
+
+def test_compress_int8_sparse_native_wire_bytes_and_close():
+    """int8 row for the sparse-native plane: per-transfer comm bytes
+    follow the analytic wire size (1-byte codes + one f32 row scale),
+    and the trajectory stays within the documented quantization band
+    (the deltas the codec sees are SGD-step-sized, so the per-round
+    perturbation sits well inside the dense-engine row's 5e-3 band in
+    test_superstep.py).  The strategy is the parameter-free
+    sparse-epidemic one, whose topology is a pure function of (seed,
+    round): edges match the uncompressed run *by construction*, making
+    the per-param comparison meaningful.  (Sparse-Morph negotiation
+    reads the perturbed trajectory — and with ``codec.sim`` the
+    replicas — so a Gumbel-top-k near-tie can legitimately flip an
+    edge there; that path is covered by the bitwise "none" matrix
+    above and the dense-engine compat row below.)"""
+    from repro.compress import CompressConfig, wire_bytes_tree
+    ref = _runner(SparseEpidemicStrategy(n=N, k=2, seed=0),
+                  engine="sparse")
+    ref.run()
+    q = _runner(SparseEpidemicStrategy(n=N, k=2, seed=0),
+                engine="sparse", compress="int8")
+    log = q.run()
+    for r, (ea, eb) in enumerate(zip(ref.edge_history, q.edge_history)):
+        assert np.array_equal(ea, eb), f"edges diverged at round {r}"
+    for x, y in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(q.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=5e-3)
+    wire = wire_bytes_tree(q.params, N, CompressConfig.parse("int8"))
+    assert log.records[-1].comm_bytes == ROUNDS * N * 2 * wire
+    assert q._model_bytes / wire > 3.5
+
+
+@pytest.mark.parametrize("mix,atol", [("exact", 1e-5), ("gather", 2e-3)])
+def test_compress_compat_int8_close_vs_dense_engine(mix, atol):
+    """Compat modes under the codec decode the same payloads as the
+    dense engine, so edges match.  "exact" mode reduces in the same
+    order as the dense tensordot (bitwise pre-codec) and stays at f32
+    tolerance; "gather" reorders the reduction, and under error
+    feedback an ulp-level difference can flip a quantization rounding
+    near a step boundary, so the band widens to the step scale
+    (step/2 ~ 1.6e-3 here; observed max deviation 4.7e-4)."""
+    dense = _runner(_strategies()["morph"](), compress="int8")
+    dense.run()
+    sp = _runner(_strategies()["morph"](), engine="sparse",
+                 sparse_mix=mix, compress="int8")
+    sp.run()
+    _assert_close(dense, sp, atol=atol)
+
+
+def test_sharded_one_device_sparse_compress_matches_single():
+    """Row-wise codec ops shard cleanly: encode-local + gather-wire +
+    decode-gathered is bitwise the single-device encode of the same
+    rows."""
+    single = _runner(SparseMorphStrategy(n=N, k=2, seed=0),
+                     engine="sparse", compress="int8")
+    single.run()
+    sh = _runner(SparseMorphStrategy(n=N, k=2, seed=0), engine="sparse",
+                 mesh_devices=1, compress="int8")
+    sh.run()
+    _assert_bitwise(single, sh)

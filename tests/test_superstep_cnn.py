@@ -321,3 +321,43 @@ def test_cnn_n50_chunk_and_stream_invariant():
     for ea, eb in zip(ref.edge_history, ch.edge_history):
         assert np.array_equal(ea, eb)
     _assert_params_bitwise(ref, ch)
+
+
+# ---------------------------------------------------------------------------
+# Compressed gossip on the CNN pytree (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_cnn_compress_none_bitwise(name):
+    """compress="none" traces the identical program on the GN-LeNet
+    pytree — bitwise params, same edges, same comm bytes."""
+    ref = _runner(STRATEGIES[name]())
+    ref.run()
+    non = _runner(STRATEGIES[name](), compress="none")
+    non.run()
+    for r, (ea, eb) in enumerate(zip(ref.edge_history, non.edge_history)):
+        assert np.array_equal(ea, eb), f"edges diverged at round {r}"
+    _assert_params_bitwise(ref, non)
+    assert [rec.comm_bytes for rec in ref.log.records] == \
+        [rec.comm_bytes for rec in non.log.records]
+
+
+def test_cnn_compress_int8_close_to_uncompressed():
+    """int8 row on the multi-leaf CNN tree: identical negotiated edges,
+    params within the per-leaf quantization band.  Each leaf carries
+    its own per-row scale, so the error bound tracks the largest leaf
+    magnitude (GroupNorm scales ~ 1.0 -> step/2 ~ 4e-3); atol = 1.5e-2
+    keeps ~3x headroom over the measured deviation."""
+    ref = _runner(STRATEGIES["morph"]())
+    ref.run()
+    q = _runner(STRATEGIES["morph"](), compress="int8")
+    q.run()
+    for r, (ea, eb) in enumerate(zip(ref.edge_history, q.edge_history)):
+        assert np.array_equal(ea, eb), f"edges diverged at round {r}"
+    for x, y in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(q.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1.5e-2)
+    ratio = (ref.log.records[-1].comm_bytes
+             / q.log.records[-1].comm_bytes)
+    assert 3.5 < ratio < 4.0
