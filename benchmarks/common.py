@@ -26,6 +26,7 @@ from repro.optim import sgd
 
 @dataclass
 class ExpConfig:
+    """One paper-experiment configuration (§IV-A scale knobs)."""
     n_nodes: int = 16
     rounds: int = 150
     eval_every: int = 15
@@ -62,6 +63,7 @@ def add_scale_args(ap, *, nodes: int = 16, rounds: int = 150,
 
 
 def make_strategy(name: str, cfg: ExpConfig):
+    """The paper's §IV-A3 strategy by name, at ``cfg``'s scale."""
     n, k, seed = cfg.n_nodes, cfg.k, cfg.seed
     if name == "static":
         deg = k if (n * k) % 2 == 0 else k + 1
@@ -124,6 +126,7 @@ def make_ingraph_strategy(name: str, cfg: ExpConfig):
 
 def run_experiment(strategy_name: str, cfg: ExpConfig,
                    progress: bool = False) -> MetricsLog:
+    """Run one (dataset, partition, strategy) experiment end to end."""
     rng = np.random.default_rng(cfg.seed)
     ds = make_image_classification(
         cfg.n_samples, num_classes=cfg.num_classes,
@@ -148,6 +151,7 @@ def run_experiment(strategy_name: str, cfg: ExpConfig,
 
 
 def summarize(log: MetricsLog) -> Dict[str, float]:
+    """Final/best accuracy and comm columns from one metrics log."""
     last = log.records[-1]
     return {
         "final_acc": last.mean_accuracy,

@@ -81,6 +81,7 @@ def _child(n: int, devices: int, rounds: int, chunk: int, k: int,
 
 
 def main(argv=None):
+    """Sharded-superstep scaling rows (fig10)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=100)
     ap.add_argument("--rounds", type=int, default=60)

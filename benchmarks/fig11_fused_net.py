@@ -138,6 +138,7 @@ def run_async(strategy_name: str, profile_name: str, cfg: ExpConfig):
 
 
 def main(argv=None):
+    """Fused-net vs event-driven comparison rows (fig11)."""
     ap = argparse.ArgumentParser()
     add_scale_args(ap, nodes=50, rounds=30, multi_nodes=True)
     ap.add_argument("--profiles", nargs="+", default=list(PROFILES),

@@ -151,6 +151,7 @@ def _sharded_hlo(n: int, k: int, rounds: int, devices: int):
 
 
 def main(argv=None):
+    """Sparse-engine scaling rows (fig12)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, nargs="+",
                     default=[100, 1000, 10000])

@@ -107,6 +107,7 @@ def _sharded_hlo(args, n: int, spec: str):
 
 
 def main(argv=None):
+    """Compressed-gossip frontier rows (fig13)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", dest="dataset", type=_dataset,
                     default="cifar10")

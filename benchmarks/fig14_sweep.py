@@ -1,0 +1,242 @@
+"""Fig. 14: the sweep farm — whole experiments vmapped into one dispatch.
+
+One :class:`repro.dlrt.SweepSuperstep` runs ``E = seeds x net-profiles``
+Morph trajectories (tiny-MLP fixture, dense gather path, folded network
+model) inside a single compiled ``lax.scan``, and this benchmark holds
+it to the two claims DESIGN.md §14 makes:
+
+* **bitwise** — every experiment in the sweep must match the same
+  experiment run alone through :class:`~repro.dlrt.CompiledSuperstep`,
+  bit for bit (params, edge history, comm bytes);
+* **faster** — one E-wide dispatch must beat E sequential dispatches on
+  wall clock (``acceptance/speedup_ge_5x`` at the CI smoke shape, where
+  ``chunk=1`` makes the sequential side pay per-round dispatch overhead
+  E times).
+
+Baseline strategies (static, el-oracle) run sweep-only and land as the
+fig3-style variance band (``<strategy>/agg_mean`` / ``agg_std``).  The
+sweep engine's HLO-cost columns are the hard-gated regression metrics.
+
+  PYTHONPATH=src python benchmarks/fig14_sweep.py --seeds 16 \\
+      --profiles ideal wan
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import harness
+from benchmarks.common import ExpConfig, make_ingraph_strategy, \
+    tiny_mlp_experiment
+
+
+def build_sweep_engine(name, spec, tr, parts, test, nets, args):
+    """The E-experiment sweep engine for one strategy family."""
+    from repro.data import DeviceDataStream
+    from repro.dlrt import RunnerConfig, SweepSuperstep
+    from repro.models.tiny import mlp_loss, mlp_params
+    from repro.netsim import SweepNetwork
+    from repro.optim import sgd
+
+    streams = [DeviceDataStream(ds=tr, parts=parts, batch_size=args.batch,
+                                seed=s) for s in spec.seeds]
+    strategies = [make_ingraph_strategy(name, ExpConfig(
+        n_nodes=args.nodes, k=args.k, seed=s, delta_r=args.delta_r))
+        for s in spec.seeds]
+    cfg = RunnerConfig(n_nodes=args.nodes, rounds=args.rounds,
+                       eval_every=args.eval_every,
+                       sim_every=args.sim_every)
+    return SweepSuperstep(
+        spec=spec, init_fn=mlp_params, loss_fn=mlp_loss, eval_fn=mlp_loss,
+        optimizer=sgd(0.05), streams=streams, test_batch=test,
+        strategies=strategies, cfg=cfg, net=SweepNetwork(nets),
+        chunk=args.chunk)
+
+
+def build_single_engine(name, spec, e, tr, parts, test, nets, args):
+    """Experiment ``e`` of the sweep as its own single-trajectory
+    engine — the pin's ground truth and the sequential-timing unit."""
+    from repro.data import DeviceDataStream
+    from repro.dlrt import CompiledSuperstep, RunnerConfig
+    from repro.models.tiny import mlp_loss, mlp_params
+    from repro.optim import sgd
+
+    s = spec.seeds[e]
+    return CompiledSuperstep(
+        init_fn=mlp_params, loss_fn=mlp_loss, eval_fn=mlp_loss,
+        optimizer=sgd(0.05), batcher=None,
+        data_stream=DeviceDataStream(ds=tr, parts=parts,
+                                     batch_size=args.batch, seed=s),
+        test_batch=test,
+        strategy=make_ingraph_strategy(name, ExpConfig(
+            n_nodes=args.nodes, k=args.k, seed=s, delta_r=args.delta_r)),
+        cfg=RunnerConfig(n_nodes=args.nodes, rounds=args.rounds,
+                         eval_every=args.eval_every,
+                         sim_every=args.sim_every, seed=s),
+        net=nets[e], chunk=args.chunk)
+
+
+def snapshot_sweep(sweep):
+    """Freeze the sweep's post-``run()`` state (params, edge history,
+    comm bytes) so the pin survives the engine advancing through the
+    timing rounds afterwards."""
+    import jax
+    params = jax.tree_util.tree_map(np.asarray, sweep.params)
+    edges = [list(h) for h in sweep.edge_history]
+    comm = [sweep.comm_bytes(e) for e in range(sweep.E)]
+    return params, edges, comm
+
+
+def pin_experiment(single, snap, e) -> bool:
+    """Bitwise conformance of sweep experiment ``e`` (snapshotted at
+    round ``rounds``) against its single-engine run: params, edge
+    history, comm bytes."""
+    import jax
+    params, edges, comm = snap
+    ps = jax.tree_util.tree_leaves(single.params)
+    pw = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda x: x[e], params))
+    bit = all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(ps, pw))
+    edges_ok = (len(single.edge_history) == len(edges[e])
+                and all(np.array_equal(a, b) for a, b in
+                        zip(single.edge_history, edges[e])))
+    return bit and edges_ok and single._comm_bytes == comm[e]
+
+
+def timed_steps(engine, rounds: int, chunk: int) -> float:
+    """Wall seconds for ``rounds`` rounds after a compile/warm chunk
+    (fig11 methodology: compiles never land in the timing; GC paused so
+    collection pressure from earlier phases doesn't land here either)."""
+    import gc
+    engine.run_steps(chunk, chunk)
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        engine.run_steps(rounds, chunk)
+        return time.perf_counter() - t0
+    finally:
+        gc.enable()
+
+
+def main(argv=None):
+    """Sweep-farm rows: variance bands, bitwise pin, speedup."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", "--n", dest="nodes", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--eval-every", type=int, default=12)
+    ap.add_argument("--seeds", type=int, default=16,
+                    help="seed-axis length (seeds 0..seeds-1)")
+    ap.add_argument("--profiles", nargs="+", default=["ideal", "wan"],
+                    help="net-profile axis (crossed with the seeds)")
+    ap.add_argument("--strategies", nargs="+",
+                    default=["morph", "static", "el-oracle"],
+                    help="first entry is the pinned+timed headline")
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="rounds per dispatch; 1 is the dispatch-bound "
+                         "shape the speedup acceptance row targets")
+    ap.add_argument("--sim-every", type=int, default=5)
+    ap.add_argument("--delta-r", type=int, default=5)
+    ap.add_argument("--timing-rounds", type=int, default=24)
+    ap.add_argument("--timing-repeats", type=int, default=3,
+                    help="best-of-N wall-clock repeats (min)")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.dlrt import SweepSpec
+    from repro.netsim import DenseNetwork, profiles
+    from repro.tune import TuneShape
+
+    bench = harness.bench("fig14_sweep")
+    spec = SweepSpec.grid(seeds=range(args.seeds), profiles=args.profiles)
+    E = len(spec)
+    print(f"# fig14: E={E} trajectories "
+          f"({args.seeds} seeds x {len(args.profiles)} profiles), "
+          f"n={args.nodes}, rounds={args.rounds}, chunk={args.chunk}",
+          flush=True)
+
+    tr, parts, _, test = tiny_mlp_experiment(args.nodes, seed=0,
+                                             batch=args.batch)
+    test = {"images": test["images"][:32], "labels": test["labels"][:32]}
+    # round_s=1.0 keeps every profile at ring depth 1 (equal-depth
+    # sweep: the staleness clamp is exact, see DESIGN.md §14).
+    nets = [DenseNetwork(profiles.get_profile(spec.profiles[e], args.nodes,
+                                              spec.seeds[e]), round_s=1.0)
+            for e in range(E)]
+
+    headline = args.strategies[0]
+    sweep_dt = None
+    for name in args.strategies:
+        engine = build_sweep_engine(name, spec, tr, parts, test, nets,
+                                    args)
+        d = sum(x.size for x in
+                jax.tree_util.tree_leaves(engine.params)) // (E * args.nodes)
+        shape = dataclasses.asdict(TuneShape(
+            backend=jax.default_backend(), n=args.nodes, d=int(d),
+            devices=1, net=1, sweep=E))
+        hlo = harness.engine_hlo(engine, args.chunk)
+        logs = engine.run()
+        harness.sweep_experiment_records(
+            bench, name, spec, logs,
+            extra_fidelity=lambda e: {
+                "staleness_mean": engine.staleness_mean(e)})
+        rec_kw = dict(shape=shape, knobs={"chunk": args.chunk},
+                      hlo=hlo)
+        if name != headline:
+            bench.record(f"hlo/{name}", hlo["op_count_total"], **rec_kw)
+            continue
+
+        # -- headline: one-dispatch timing, then bitwise pin, then the
+        # E-sequential-dispatch timing (the sweep is timed before the E
+        # single engines exist, so neither side pays for the other's
+        # heap).
+        T = args.timing_rounds
+        R = args.timing_repeats
+        snap = snapshot_sweep(engine)
+        dt_sweep = min(timed_steps(engine, T, args.chunk)
+                       for _ in range(R))
+        singles = []
+        mismatches = 0
+        for e in range(E):
+            single = build_single_engine(name, spec, e, tr, parts, test,
+                                         nets, args)
+            single.run_steps(args.rounds, args.chunk)
+            if not pin_experiment(single, snap, e):
+                mismatches += 1
+                print(f"fig14: BITWISE MISMATCH experiment {e} "
+                      f"({spec.describe(e)})", file=sys.stderr)
+            singles.append(single)
+        bench.record("acceptance/bitwise_vs_singles",
+                     int(mismatches == 0),
+                     fidelity={"experiments": E, "mismatches": mismatches})
+        bench.record("acceptance/trajectories", E,
+                     fidelity={"ge_32": int(E >= 32)})
+
+        dt_seq = min(sum(timed_steps(s, T, args.chunk) for s in singles)
+                     for _ in range(R))
+        speedup = dt_seq / dt_sweep
+        sweep_dt = dt_sweep
+        bench.record(f"sweep/{name}_ms_per_round",
+                     f"{dt_sweep / T * 1e3:.3f}",
+                     wall_clock_s=dt_sweep, rounds_per_sec=T / dt_sweep,
+                     **rec_kw)
+        bench.record(f"seq/{name}_ms_per_round",
+                     f"{dt_seq / T * 1e3:.3f}", wall_clock_s=dt_seq,
+                     shape=shape, knobs={"chunk": args.chunk})
+        bench.record("derived/speedup", f"{speedup:.2f}",
+                     fidelity={"experiments": E,
+                               "timing_rounds": T})
+        bench.record("acceptance/speedup_ge_5x", int(speedup >= 5.0))
+    bench.finish()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,7 @@ from . import harness
 
 
 def main(argv=None):
+    """Connectivity-vs-view-size rows (fig2)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--trials", type=int, default=60)
     ap.add_argument("--sizes", type=int, nargs="+",

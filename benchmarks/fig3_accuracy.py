@@ -173,6 +173,7 @@ STRATEGIES = ("morph", "static", "el-oracle", "fully-connected")
 
 
 def main(argv=None):
+    """Engine-path accuracy reproduction rows (fig3)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", dest="dataset", type=_dataset,
                     default="cifar10",

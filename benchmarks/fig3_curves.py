@@ -13,6 +13,7 @@ STRATEGIES = ("fully-connected", "morph", "el-oracle", "static")
 
 
 def main(argv=None):
+    """Accuracy-curve contest rows (fig3)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=120)
     ap.add_argument("--nodes", type=int, default=16)

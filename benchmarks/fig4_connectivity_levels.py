@@ -11,6 +11,7 @@ from .common import ExpConfig, run_experiment, summarize
 
 
 def main(argv=None):
+    """Connectivity-level sweep rows (fig4)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=120)
     ap.add_argument("--nodes", type=int, default=16)

@@ -12,6 +12,7 @@ from .common import ExpConfig, run_experiment, summarize
 
 
 def main(argv=None):
+    """Beta/delta_r ablation rows (fig5)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--nodes", type=int, default=16)

@@ -39,6 +39,7 @@ def run_metrics(strategy, rounds: int, n: int, k: int, params):
 
 
 def main(argv=None):
+    """Isolation-under-churn rows (fig6/7)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=100)
     ap.add_argument("--rounds", type=int, default=50)

@@ -49,6 +49,7 @@ def _network(name: str, n: int, horizon_s: float, seed: int):
 
 
 def run_async(strategy_name: str, profile_name: str, cfg: ExpConfig):
+    """One event-driven asynchronous run at the given scale."""
     rng = np.random.default_rng(cfg.seed)
     ds = make_image_classification(
         cfg.n_samples, num_classes=cfg.num_classes,
@@ -74,6 +75,7 @@ def run_async(strategy_name: str, profile_name: str, cfg: ExpConfig):
 
 
 def main(argv=None):
+    """Asynchronous-gossip comparison rows (fig8)."""
     ap = argparse.ArgumentParser()
     add_scale_args(ap, nodes=8, rounds=30)
     ap.add_argument("--target", type=float, default=0.5,

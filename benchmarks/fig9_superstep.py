@@ -41,6 +41,7 @@ class RingBatcher:
         self.i = 0
 
     def next(self):
+        """The next per-node batch stack, advancing the ring."""
         b = self.batches[self.i % len(self.batches)]
         self.i += 1
         return b
@@ -129,6 +130,7 @@ def _compiled_row(bench, runner, n: int, rounds: int, chunk: int,
 
 
 def main(argv=None):
+    """Superstep-engine throughput rows (fig9)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, nargs="+", default=[16, 50, 100])
     ap.add_argument("--rounds", type=int, default=150)

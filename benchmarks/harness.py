@@ -139,6 +139,44 @@ def engine_hlo(engine, chunk: int) -> Dict:
             "chunk": chunk}
 
 
+def sweep_experiment_records(b: "Bench", prefix: str, spec, logs,
+                             *, extra_fidelity=None) -> list:
+    """Fan one sweep dispatch's stacked outputs into one BENCH record
+    per experiment plus aggregate mean/std rows.
+
+    ``spec`` is the :class:`repro.dlrt.SweepSpec`, ``logs`` the
+    per-experiment :class:`~repro.dlrt.MetricsLog` list a
+    ``SweepSuperstep.run`` returned.  Each experiment lands as
+    ``<prefix>/e<i>`` with its spec coordinates and final-record
+    fidelity; the cross-experiment aggregate lands as
+    ``<prefix>/agg_mean`` / ``<prefix>/agg_std`` (the fig3-style
+    variance band).  ``extra_fidelity(e)`` may contribute extra
+    per-experiment fidelity columns.  Returns the per-experiment final
+    accuracies.
+    """
+    import numpy as np
+    accs = []
+    for e, log in enumerate(logs):
+        rec = log.records[-1]
+        fid = {"accuracy": rec.mean_accuracy, "loss": rec.mean_loss,
+               "internode_variance": rec.internode_variance,
+               "comm_bytes": rec.comm_bytes, **spec.describe(e)}
+        if extra_fidelity is not None:
+            fid.update(extra_fidelity(e))
+        b.record(f"{prefix}/e{e}", f"{rec.mean_accuracy:.4f}",
+                 fidelity=fid, print_csv=False)
+        accs.append(rec.mean_accuracy)
+    arr = np.asarray(accs, np.float64)
+    b.record(f"{prefix}/agg_mean", f"{arr.mean():.4f}",
+             fidelity={"accuracy_mean": float(arr.mean()),
+                       "experiments": len(logs)})
+    b.record(f"{prefix}/agg_std", f"{arr.std():.4f}",
+             fidelity={"accuracy_std": float(arr.std()),
+                       "accuracy_min": float(arr.min()),
+                       "accuracy_max": float(arr.max())})
+    return accs
+
+
 def shape_dict(cfg, params) -> Dict:
     """The run's ``repro.tune`` shape key as a JSON-able dict."""
     import dataclasses

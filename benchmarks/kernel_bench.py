@@ -25,6 +25,7 @@ def _time(fn, *args, warmup=2, iters=5) -> float:
 
 
 def main(argv=None):
+    """Pallas-kernel microbenchmark rows."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="+",
                     default=[16384, 262144])

@@ -21,6 +21,7 @@ from . import harness
 
 
 def load_records(paths: List[str]) -> List[Dict]:
+    """Read dryrun/rerun JSON result files into one record list."""
     records = []
     for pattern in paths:
         for path in sorted(glob.glob(pattern)):
@@ -35,6 +36,7 @@ def load_records(paths: List[str]) -> List[Dict]:
 
 
 def fmt_row(r: Dict) -> str:
+    """One roofline CSV row from a dryrun record."""
     if "skipped" in r:
         return (f"| {r['arch']} | {r['shape']} | "
                 f"{'multi' if r.get('multi_pod') else 'single'} | "
@@ -54,6 +56,7 @@ def fmt_row(r: Dict) -> str:
 
 
 def main(argv=None):
+    """Roofline summary rows from dryrun results."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--inputs", nargs="+",
                     default=["dryrun_results.json", "rerun*.json",

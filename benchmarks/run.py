@@ -49,6 +49,7 @@ def write_junit(path: str, results) -> None:
 
 
 def main(argv=None):
+    """Run the registered benchmark sections (see module docstring)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="closer-to-paper sizes (slower)")
@@ -56,7 +57,8 @@ def main(argv=None):
                     help="tiny n/rounds: every fig script runs end to "
                          "end in minutes (the CI benchmarks-smoke job)")
     ap.add_argument("--only", default=None,
-                    help="run a single section by name")
+                    help="run selected sections: one name or a "
+                         "comma-separated list")
     ap.add_argument("--bench-dir", default=None,
                     help="directory for BENCH_<name>.json records "
                          "(default: $BENCH_DIR, else the working "
@@ -85,7 +87,7 @@ def main(argv=None):
                    fig4_connectivity_levels, fig5_ablation, fig67_isolation,
                    fig8_async, fig9_superstep, fig10_sharded,
                    fig11_fused_net, fig12_sparse, fig13_compress,
-                   kernel_bench, roofline, table1_accuracy)
+                   fig14_sweep, kernel_bench, roofline, table1_accuracy)
 
     sections = [
         ("fig2", lambda: fig2_connectivity.main(
@@ -160,21 +162,36 @@ def main(argv=None):
                   "--eval-batch-chunk", "32"] if args.smoke
             else ["--nodes", "16", "--rounds", "60",
                   "--eval-every", "20"])),
+        # Sweep farm: E = seeds x profiles trajectories in one vmapped
+        # dispatch, pinned bitwise against E single dispatches and timed
+        # against them.  chunk=1 is the dispatch-bound shape where the
+        # >=5x acceptance row holds on a single-core runner.
+        ("fig14_sweep", lambda: fig14_sweep.main(
+            ["--seeds", "32", "--nodes", "16", "--rounds", "48",
+             "--eval-every", "24", "--timing-rounds", "48"] if args.full
+            else ["--seeds", "16", "--nodes", "6", "--rounds", "24",
+                  "--eval-every", "12", "--chunk", "1",
+                  "--timing-rounds", "24"])),
         ("kernels", lambda: kernel_bench.main(
             ["--sizes", "65536"] if args.smoke else [])),
         ("roofline", lambda: roofline.main(["--csv"])),
     ]
 
     names = [name for name, _ in sections]
-    if args.only and args.only not in names:
-        print(f"unknown section {args.only!r}; valid sections: "
-              f"{', '.join(names)}", file=sys.stderr)
-        return 2
+    only = ([s.strip() for s in args.only.split(",") if s.strip()]
+            if args.only else None)
+    if only:
+        unknown = [s for s in only if s not in names]
+        if unknown:
+            print(f"unknown section(s) "
+                  f"{', '.join(repr(s) for s in unknown)}; "
+                  f"valid sections: {', '.join(names)}", file=sys.stderr)
+            return 2
 
     failures = 0
     results = []
     for name, fn in sections:
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         t0 = time.time()
         print(f"### section {name}", flush=True)

@@ -16,6 +16,7 @@ STRATEGIES = ("fully-connected", "morph", "el-oracle", "static")
 
 
 def main(argv=None):
+    """Table I accuracy rows at larger populations."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=150)
     ap.add_argument("--nodes", type=int, default=16)

@@ -139,13 +139,30 @@ class InGraphMorphStrategy:
     def graph_round(self, gstate, rnd, sim):
         """One round inside jit: negotiate every ``delta_r`` rounds (on the
         cached similarity matrix), reuse the held edges otherwise."""
+        return self.sweep_graph_round(gstate, rnd, sim)
+
+    def sweep_graph_round(self, gstate, rnd, sim, delta_r=None, beta=None):
+        """``graph_round`` with *traced* hyperparameter overrides — the
+        sweep engine's per-experiment axis (DESIGN.md §14).
+
+        ``delta_r`` replaces the negotiation cadence (it only enters the
+        ``lax.cond`` predicate) and ``beta`` the Gumbel-top-k inverse
+        temperature (it only scales the selection logits), so both are
+        vmappable scalars; with both ``None`` this *is* ``graph_round``
+        trace for trace.  ``k``/``view_size``/``k_out`` set ``top_k``
+        output shapes and stay constructor-static.  Under ``vmap`` a
+        batched ``delta_r`` turns the cond into a select — both branches
+        execute every round, the per-experiment predicate picks the
+        cond-semantics value, trajectories are unchanged."""
         import jax
         from .morph import update_topology
+        dr = self.delta_r if delta_r is None else delta_r
+        b = self.beta if beta is None else beta
 
         def negotiate(st):
             new_st, w = update_topology(
                 st, None, k=min(self.k, self.n - 1),
-                view_size=min(self.view_size, self.n - 1), beta=self.beta,
+                view_size=min(self.view_size, self.n - 1), beta=b,
                 sim_fn=lambda _: sim,
                 k_out=min(self.k_out, self.n - 1))
             return new_st, new_st.edges, w
@@ -153,8 +170,7 @@ class InGraphMorphStrategy:
         def reuse(st):
             return st, st.edges, mixing.uniform_weights_jax(st.edges)
 
-        return jax.lax.cond(rnd % self.delta_r == 0, negotiate, reuse,
-                            gstate)
+        return jax.lax.cond(rnd % dr == 0, negotiate, reuse, gstate)
 
     # -- host strategy surface --------------------------------------------
 

@@ -96,7 +96,7 @@ class DeviceDataStream:
         self.seed = seed
         self.n = len(parts)
 
-    def draw(self, data, index, sizes, node_ids, rnd):
+    def draw(self, data, index, sizes, node_ids, rnd, seed=None):
         """One stacked batch *inside jit*: ``data`` is the shared
         ``[N_total, ...]`` dataset (replicated under sharding),
         ``index``/``sizes``/``node_ids`` the (shard of the) ``[n, S]`` /
@@ -104,9 +104,16 @@ class DeviceDataStream:
         Returns a ``[n, b, ...]`` batch pytree.  Sampling is with
         replacement, uniform over each node's true shard (the
         wrap-padding tail is never indexed), and draws the bitwise-same
-        samples the former materialized ``[n, S, ...]`` layout did."""
+        samples the former materialized ``[n, S, ...]`` layout did.
+
+        ``seed`` overrides ``self.seed`` and may be a *traced* scalar —
+        the sweep engine (DESIGN.md §14) vmaps one seed per experiment
+        through here; ``PRNGKey(traced)`` yields the same key the eager
+        ``PRNGKey(int)`` does, so a swept experiment draws bitwise the
+        batches its single-experiment twin draws."""
         import jax
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), rnd)
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.seed if seed is None else seed), rnd)
 
         def one(ix, size, nid):
             k = jax.random.fold_in(key, nid)
@@ -115,6 +122,47 @@ class DeviceDataStream:
             return jax.tree_util.tree_map(lambda x: x[sel], data)
 
         return jax.vmap(one)(index, sizes, node_ids)
+
+
+def stack_streams(streams: Sequence["DeviceDataStream"]):
+    """Stack per-experiment :class:`DeviceDataStream` index tables over
+    one shared dataset for the sweep engine (DESIGN.md §14).
+
+    All streams must draw the same batch size from the same underlying
+    dataset arrays (the whole point of the layout: the dataset lives on
+    device once, only the ``4·n·S``-byte tables are per-experiment).
+    Shorter tables are wrap-padded on their ``S`` axis up to the widest
+    stream's — padding past ``sizes`` is never indexed, so the widening
+    leaves every experiment's draws bitwise unchanged.
+
+    Returns ``(data, index [E, n, S_max] i32, sizes [E, n] i32,
+    seeds [E] i32, batch)``.
+    """
+    streams = list(streams)
+    if not streams:
+        raise ValueError("stack_streams needs at least one stream")
+    first = streams[0]
+    for e, st in enumerate(streams):
+        if st.batch != first.batch:
+            raise ValueError(f"experiment {e}: batch {st.batch} != "
+                             f"{first.batch} (one vmapped draw shape)")
+        if st.n != first.n:
+            raise ValueError(f"experiment {e}: covers {st.n} nodes, "
+                             f"experiment 0 covers {first.n}")
+        same = all(np.array_equal(st.data[k], first.data[k])
+                   for k in first.data)
+        if set(st.data) != set(first.data) or not same:
+            raise ValueError(f"experiment {e}: dataset differs from "
+                             "experiment 0 — the sweep shares one "
+                             "device-resident dataset; vary the "
+                             "partition (index tables), not the data")
+    s_max = max(st.index.shape[1] for st in streams)
+    index = np.stack([
+        np.pad(st.index, ((0, 0), (0, s_max - st.index.shape[1])),
+               mode="wrap") for st in streams]).astype(np.int32)
+    sizes = np.stack([st.sizes for st in streams]).astype(np.int32)
+    seeds = np.asarray([st.seed for st in streams], np.int32)
+    return first.data, index, sizes, seeds, first.batch
 
 
 class TokenBatcher:

@@ -8,8 +8,10 @@ from .distributed import (MorphHParams, TrainState, abstract_train_state,
 from .metrics import (MetricsLog, NetMetricsLog, NetRecord, RoundRecord,
                       internode_variance)
 from .runtime import DecentralizedRunner, RunnerConfig
+from .sweep import SweepSpec, SweepSuperstep
 
 __all__ = ["CompiledSuperstep", "eval_boundaries",
+           "SweepSpec", "SweepSuperstep",
            "MorphHParams", "TrainState", "abstract_train_state",
            "batch_sharding", "cache_sharding", "init_train_state",
            "leaf_spec", "make_serve_step", "make_train_step", "node_axes",

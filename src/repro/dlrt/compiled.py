@@ -140,6 +140,81 @@ def _pad_nodes(tree, n_pad: int):
     return jax.tree_util.tree_map(one, tree)
 
 
+# ---------------------------------------------------------------------------
+# Dense-network scan helpers (DESIGN.md §9), shared by this engine's
+# round bodies and the sweep engine's vmapped per-experiment body
+# (dlrt.sweep, DESIGN.md §14).  Pure functions of their arguments —
+# everything an engine would close over (n, S, the uniform-mixing flag)
+# arrives explicitly.
+# ---------------------------------------------------------------------------
+
+def net_select(mask, new, old):
+    """Per-node where over a state pytree; scalar leaves (shared
+    optimizer counters) and leaves not on the node axis always
+    advance."""
+    def one(a, b):
+        if getattr(a, "ndim", 0) == 0 or a.shape[0] != mask.shape[0]:
+            return a
+        m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree_util.tree_map(one, new, old)
+
+
+def net_effective(edges, w, up, step, stal, drop, S: int, *,
+                  uniform: bool):
+    """Delivery + mixing plan at logical n: which negotiated edges
+    arrive, the renormalized weights over the arrived set, the
+    ``[n, n, S]`` staleness-expanded weights and the per-round
+    staleness stats."""
+    n = edges.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    active = up & step                   # receivers that mix
+    delivered = edges & ~drop & up[None, :] & active[:, None]
+    if uniform:
+        # Alg. 2 l.12 over the models that actually arrived —
+        # the same renormalization AsyncRunner._mix_one applies.
+        w_eff = uniform_weights_jax(delivered)
+    else:
+        support = delivered | eye
+        kept = w.astype(jnp.float32) * support
+        lost = (w.astype(jnp.float32) * ~support).sum(axis=1)
+        w_eff = kept + jnp.diag(lost)
+    w_eff = jnp.where(active[:, None], w_eff,
+                      jnp.eye(n, dtype=w_eff.dtype))
+    d_idx = jnp.where(eye, 0, stal)
+    onehot = d_idx[:, :, None] == jnp.arange(S)[None, None, :]
+    w_stal = w_eff[:, :, None] * onehot              # [n, n, S]
+    stale_counts = jnp.sum(onehot & delivered[:, :, None],
+                           axis=(0, 1)).astype(jnp.int32)
+    return delivered, d_idx, w_stal, stale_counts
+
+
+def net_push(params, netstate, rnd, step, S: int):
+    """Advance both rings: slot 0 becomes this round's post-step
+    snapshot / last-step round."""
+    hist, lhist = netstate
+    def one(h, p):
+        if S == 1:
+            return p[:, None]
+        return jnp.concatenate([p[:, None], h[:, :-1]], axis=1)
+    hist = jax.tree_util.tree_map(one, hist, params)
+    last = jnp.where(step, rnd.astype(jnp.int32), lhist[:, 0])
+    lhist = last[:, None] if S == 1 else \
+        jnp.concatenate([last[:, None], lhist[:, :-1]], axis=1)
+    return hist, lhist
+
+
+def net_observed(rnd, lhist, d_idx, delivered):
+    """Sum over delivered edges of the *content* staleness: this
+    round minus the sender's last completed step as of the
+    snapshot each edge delivers from."""
+    n = d_idx.shape[0]
+    sender = jnp.broadcast_to(jnp.arange(n)[None, :], (n, n))
+    last = lhist[sender, d_idx]                      # [n, n]
+    obs = rnd.astype(jnp.int32) - last
+    return jnp.sum(jnp.where(delivered, obs, 0)).astype(jnp.int32)
+
+
 class CompiledSuperstep:
     """Runs an in-graph-capable :class:`TopologyStrategy` (one exposing
     ``init_graph_state`` / ``graph_round`` — the contract in
@@ -572,18 +647,13 @@ class CompiledSuperstep:
                                                        0), tree)
 
         # --- dense-network scan helpers (net is not None only) -------------
+        # The per-round delivery/ring machinery (net_select /
+        # net_effective / net_push / net_observed) lives at module level
+        # so the sweep engine's vmapped body reuses it verbatim; only
+        # the profile-draw plumbing (net_masks) and the mixing
+        # contraction (net_mix, kernel-path-aware) stay engine-local.
         S = self._net_S
         model_bytes = self._wire_bytes
-
-        def net_select(mask, new, old):
-            # per-node where over a state pytree; scalar leaves (shared
-            # optimizer counters) always advance.
-            def one(a, b):
-                if getattr(a, "ndim", 0) == 0 or a.shape[0] != mask.shape[0]:
-                    return a
-                m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
-                return jnp.where(m, a, b)
-            return jax.tree_util.tree_map(one, new, old)
 
         def net_masks(rnd):
             r = jnp.minimum(rnd, cfg.rounds - 1)
@@ -591,55 +661,6 @@ class CompiledSuperstep:
             stal = net.staleness_matrix(rnd, n, model_bytes, S)
             drop = net.drop_mask(rnd, n)
             return up, step, stal, drop
-
-        def net_effective(edges, w, up, step, stal, drop):
-            """Delivery + mixing plan at logical n: which negotiated edges
-            arrive, the renormalized weights over the arrived set, the
-            ``[n, n, S]`` staleness-expanded weights and the per-round
-            staleness stats."""
-            eye = jnp.eye(n, dtype=bool)
-            active = up & step                   # receivers that mix
-            delivered = edges & ~drop & up[None, :] & active[:, None]
-            if uniform:
-                # Alg. 2 l.12 over the models that actually arrived —
-                # the same renormalization AsyncRunner._mix_one applies.
-                w_eff = uniform_weights_jax(delivered)
-            else:
-                support = delivered | eye
-                kept = w.astype(jnp.float32) * support
-                lost = (w.astype(jnp.float32) * ~support).sum(axis=1)
-                w_eff = kept + jnp.diag(lost)
-            w_eff = jnp.where(active[:, None], w_eff,
-                              jnp.eye(n, dtype=w_eff.dtype))
-            d_idx = jnp.where(eye, 0, stal)
-            onehot = d_idx[:, :, None] == jnp.arange(S)[None, None, :]
-            w_stal = w_eff[:, :, None] * onehot              # [n, n, S]
-            stale_counts = jnp.sum(onehot & delivered[:, :, None],
-                                   axis=(0, 1)).astype(jnp.int32)
-            return delivered, d_idx, w_stal, stale_counts
-
-        def net_push(params, netstate, rnd, step):
-            """Advance both rings: slot 0 becomes this round's post-step
-            snapshot / last-step round."""
-            hist, lhist = netstate
-            def one(h, p):
-                if S == 1:
-                    return p[:, None]
-                return jnp.concatenate([p[:, None], h[:, :-1]], axis=1)
-            hist = jax.tree_util.tree_map(one, hist, params)
-            last = jnp.where(step, rnd.astype(jnp.int32), lhist[:, 0])
-            lhist = last[:, None] if S == 1 else \
-                jnp.concatenate([last[:, None], lhist[:, :-1]], axis=1)
-            return hist, lhist
-
-        def net_observed(rnd, lhist, d_idx, delivered):
-            """Sum over delivered edges of the *content* staleness: this
-            round minus the sender's last completed step as of the
-            snapshot each edge delivers from."""
-            sender = jnp.broadcast_to(jnp.arange(n)[None, :], (n, n))
-            last = lhist[sender, d_idx]                      # [n, n]
-            obs = rnd.astype(jnp.int32) - last
-            return jnp.sum(jnp.where(delivered, obs, 0)).astype(jnp.int32)
 
         def net_mix(w_stal_flat, hist):
             """``[m, n_h * S] @ [n_h * S, ...]`` — the staleness-expanded
@@ -718,9 +739,9 @@ class CompiledSuperstep:
                 return (params, opt_state, gstate, sim, netstate,
                         resid, hat), edges
             netstate = net_push(decoded if codec is not None else params,
-                                netstate, rnd, step)
+                                netstate, rnd, step, S)
             delivered, d_idx, w_stal, stale_counts = net_effective(
-                edges, w, up, step, stal, drop)
+                edges, w, up, step, stal, drop, S, uniform=uniform)
             obs_sum = net_observed(rnd, netstate[1], d_idx, delivered)
             if codec is None:
                 params = net_mix(w_stal.reshape(n, n * S), netstate[0])
@@ -777,7 +798,7 @@ class CompiledSuperstep:
                                                   netstate[0])
                 wire, decoded, resid = comp(params, hat_prev, resid)
             netstate = net_push(decoded if codec is not None else params,
-                                netstate, rnd, step)
+                                netstate, rnd, step, S)
             hist_full = gather_full(netstate[0])
             if sim_fn is not None:
                 logical = jax.tree_util.tree_map(lambda x: x[:n, 0],
@@ -785,7 +806,7 @@ class CompiledSuperstep:
                 sim = refresh_sim(rnd, logical, sim)
             gstate, edges, w = strategy.graph_round(gstate, rnd, sim)
             delivered, d_idx, w_stal, stale_counts = net_effective(
-                edges, w, up, step, stal, drop)
+                edges, w, up, step, stal, drop, S, uniform=uniform)
             obs_sum = net_observed(rnd, netstate[1], d_idx, delivered)
             w_rows = jax.lax.dynamic_slice_in_dim(
                 embed_w_stal(w_stal), shard_index() * n_local, n_local, 0)

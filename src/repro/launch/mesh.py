@@ -45,3 +45,28 @@ def make_superstep_mesh(num_devices: int | None = None):
                          "device_count=N before importing jax to simulate "
                          "more CPU devices)")
     return jax.make_mesh((nd,), ("data",))
+
+
+def make_sweep_mesh(exp_devices: int, node_devices: int = 1):
+    """2-D ``("exp", "data")`` mesh for the sweep engine
+    (``repro.dlrt.SweepSuperstep``, DESIGN.md §14): the **experiment
+    axis** shards over ``exp`` (embarrassingly parallel — every
+    trajectory is independent, so the split is bitwise-free) and the DL
+    **node axis** over ``data`` (the same gather-collective schedule the
+    1-D sharded superstep uses).
+
+    ``exp_devices * node_devices`` must not exceed the local device
+    count; simulate a multi-device CPU host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    importing jax), exactly like :func:`make_superstep_mesh`.
+    """
+    avail = jax.local_device_count()
+    if exp_devices < 1 or node_devices < 1:
+        raise ValueError("exp_devices and node_devices must be >= 1")
+    if exp_devices * node_devices > avail:
+        raise ValueError(
+            f"exp_devices*node_devices={exp_devices * node_devices} > "
+            f"{avail} local devices (set XLA_FLAGS=--xla_force_host_"
+            "platform_device_count=N before importing jax to simulate "
+            "more CPU devices)")
+    return jax.make_mesh((exp_devices, node_devices), ("exp", "data"))

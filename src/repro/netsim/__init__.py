@@ -17,14 +17,14 @@ Layers (DESIGN.md §5):
 """
 from . import profiles, sampling
 from .async_runner import AsyncConfig, AsyncRunner
-from .dense import DenseNetwork
+from .dense import DenseNetwork, SweepNetwork
 from .events import Event, EventLoop
 from .faults import FaultConfig, FaultModel
 from .messages import CTRL_BYTES, ModelTransfer, Packet
 from .transport import NetworkProfile, Partition, Transport, TransportStats
 
 __all__ = ["profiles", "sampling", "AsyncConfig", "AsyncRunner",
-           "DenseNetwork", "Event", "EventLoop",
+           "DenseNetwork", "SweepNetwork", "Event", "EventLoop",
            "FaultConfig", "FaultModel", "CTRL_BYTES", "ModelTransfer",
            "Packet", "NetworkProfile", "Partition", "Transport",
            "TransportStats"]

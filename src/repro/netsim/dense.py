@@ -38,7 +38,7 @@ invariant to chunk boundaries and shard counts.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -120,3 +120,92 @@ class DenseNetwork:
         up = self.faults.round_up_masks(rounds, self.round_s)
         return up, self.faults.round_step_masks(rounds, self.round_s,
                                                 up=up)
+
+
+class SweepNetwork:
+    """Per-experiment stack of :class:`DenseNetwork` models for the sweep
+    engine (``repro.dlrt.SweepSuperstep``, DESIGN.md §14).
+
+    Each experiment keeps its own profile scalars (seed, fixed latency,
+    jitter, drop rate) and fault timeline; the sweep scan body folds
+    them per-experiment through the always-draw sampling twins
+    (:func:`repro.netsim.sampling.jitter_matrix_folded` /
+    :func:`drop_matrix_folded`), so experiment ``e``'s draws are bitwise
+    the draws a single-experiment :class:`DenseNetwork` run with
+    ``nets[e]`` makes.
+
+    The scan carry's snapshot ring is shared across experiments, so its
+    physical depth is ``max_e depth_e`` (:meth:`depth`); each
+    experiment's staleness indices still clamp to its *own*
+    ``depth_e - 1`` (:meth:`depths`), matching the single run's
+    bounded-staleness semantics slot for slot.  Partition windows are
+    static per-profile python structure and cannot ride the vmapped
+    experiment axis — profiles with partitions are rejected.  All
+    experiments must share ``round_s`` (one scan round = one shared
+    virtual time slot).
+    """
+
+    def __init__(self, nets: Sequence[DenseNetwork]):
+        nets = list(nets)
+        if not nets:
+            raise ValueError("SweepNetwork needs at least one DenseNetwork")
+        round_s = {net.round_s for net in nets}
+        if len(round_s) != 1:
+            raise ValueError(f"all experiments must share round_s "
+                             f"(got {sorted(round_s)}) — one scan round "
+                             "is one shared virtual time slot")
+        for e, net in enumerate(nets):
+            if net.profile.partitions:
+                raise ValueError(
+                    f"experiment {e}: profile {net.profile.name!r} has "
+                    "partition windows — static group structure cannot "
+                    "be vmapped over the experiment axis; run it as a "
+                    "single-experiment DenseNetwork")
+        self.nets = nets
+        self.round_s = nets[0].round_s
+
+    def __len__(self) -> int:
+        return len(self.nets)
+
+    # -- static layout ------------------------------------------------------
+
+    def depth(self, model_bytes: int) -> int:
+        """Physical ring depth: the deepest experiment's
+        :meth:`DenseNetwork.depth` (shapes the shared scan carry)."""
+        return max(net.depth(model_bytes) for net in self.nets)
+
+    def depths(self, model_bytes: int) -> np.ndarray:
+        """``[E]`` int32 per-experiment logical depths — the sweep body
+        clamps experiment ``e``'s staleness to ``depths[e] - 1`` so its
+        trajectory matches the single run's shallower ring exactly."""
+        return np.asarray([net.depth(model_bytes) for net in self.nets],
+                          np.int32)
+
+    def profile_arrays(self, model_bytes: int):
+        """The per-experiment profile scalars as ``[E]`` arrays the scan
+        body consumes: ``(seed i32, fixed_s f32, jitter_s f32,
+        drop_rate f32)``.  ``fixed_s`` pre-folds base latency +
+        serialization to one f32 exactly like
+        :func:`repro.netsim.sampling.latency_matrix` does, so the
+        in-scan add is bitwise the single run's."""
+        seeds = np.asarray([net.profile.seed for net in self.nets],
+                           np.int32)
+        fixed = np.asarray([np.float32(net.profile.base_latency_s
+                                       + net.profile.transfer_seconds(
+                                           model_bytes))
+                            for net in self.nets], np.float32)
+        jit = np.asarray([net.profile.jitter_s for net in self.nets],
+                         np.float32)
+        drop = np.asarray([net.profile.drop_rate for net in self.nets],
+                          np.float32)
+        return seeds, fixed, jit, drop
+
+    # -- fault timeline (host precompute, stacked over experiments) --------
+
+    def round_masks(self, rounds: int, n: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """``(up [E, rounds, n], step [E, rounds, n])`` bool stacks of
+        each experiment's seeded fault timeline."""
+        ups, steps = zip(*(net.round_masks(rounds, n)
+                           for net in self.nets))
+        return np.stack(ups), np.stack(steps)

@@ -75,6 +75,30 @@ def drop_matrix(profile, rnd, n: int,
     return u < profile.drop_rate
 
 
+def jitter_matrix_folded(seed, rnd, n: int, jitter_s) -> jax.Array:
+    """Experiment-folded twin of :func:`jitter_matrix` for the sweep
+    engine (DESIGN.md §14): ``seed`` and ``jitter_s`` may be traced
+    scalars (one per experiment under ``vmap``), so the zero-jitter
+    early return above is unavailable — this always draws.  Because
+    ``u * 0.0 == 0.0`` exactly, a traced ``jitter_s = 0`` reproduces the
+    eager zeros matrix bitwise, and any positive ``jitter_s`` performs
+    the identical ``uniform * scale`` the eager path does."""
+    key = jax.random.fold_in(round_key(seed, rnd), STREAM_JITTER)
+    return jax.random.uniform(key, (n, n), jnp.float32) * jitter_s
+
+
+def drop_matrix_folded(seed, rnd, n: int, drop_rate,
+                       stream: int = STREAM_DROP_MODEL) -> jax.Array:
+    """Experiment-folded twin of :func:`drop_matrix`: always draws so
+    ``seed``/``drop_rate`` may be traced per-experiment scalars.
+    ``u < 0.0`` is all-False, reproducing the zero-rate early return
+    bitwise; positive rates compare the identical uniforms the eager
+    path draws for the same ``(seed, rnd, stream)``."""
+    key = jax.random.fold_in(round_key(seed, rnd), stream)
+    u = jax.random.uniform(key, (n, n), jnp.float32)
+    return u < drop_rate
+
+
 def partition_matrix(profile, t, n: int) -> jax.Array:
     """Deterministic partition-block mask ``[n, n]`` bool at virtual time
     ``t`` (True = the edge crosses a partition window and is blocked).

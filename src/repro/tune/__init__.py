@@ -16,7 +16,7 @@ from .space import (DEFAULT_BLOCK_DS, DEFAULT_CHUNKS,
                     candidate_space)
 from .tuner import (PEAKS, TuneResult, prune, stage1_score, time_engine,
                     tune, tune_into)
-from .workload import mlp_runner_factory
+from .workload import mlp_runner_factory, sweep_runner_factory
 
 __all__ = ["CACHE_VERSION", "DEFAULT_CACHE_PATH", "ENV_CACHE",
            "TuneEntry", "TuneShape", "TuningCache", "load_default_cache",
@@ -25,4 +25,5 @@ __all__ = ["CACHE_VERSION", "DEFAULT_CACHE_PATH", "ENV_CACHE",
            "DEFAULT_SPARSE_CANDIDATES", "Candidate",
            "candidate_space",
            "PEAKS", "TuneResult", "prune", "stage1_score", "time_engine",
-           "tune", "tune_into", "mlp_runner_factory"]
+           "tune", "tune_into", "mlp_runner_factory",
+           "sweep_runner_factory"]

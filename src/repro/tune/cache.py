@@ -37,11 +37,16 @@ class TuneShape:
     d: int                       # per-node flattened parameter count
     devices: int = 1             # node-axis shard count (1 = unsharded)
     net: int = 0                 # dense-network ring depth S (0 = none)
+    sweep: int = 0               # vmapped experiment count E (0 = the
+                                 # single-trajectory engine)
 
     def key(self) -> str:
-        """Canonical string key, stable across sessions."""
-        return (f"{self.backend}|n={self.n}|d={self.d}"
+        """Canonical string key, stable across sessions.  The ``sweep``
+        coordinate is appended only when nonzero, so every key written
+        before the sweep axis existed still matches its shape."""
+        base = (f"{self.backend}|n={self.n}|d={self.d}"
                 f"|devices={self.devices}|net={self.net}")
+        return base if self.sweep == 0 else f"{base}|sweep={self.sweep}"
 
 
 @dataclass(frozen=True)

@@ -74,3 +74,61 @@ def mlp_runner_factory(n: int, *, batch: int = 4, rounds: int = 10 ** 9,
                 mesh_devices=mesh_devices, net=net))
 
     return make_runner
+
+
+def sweep_runner_factory(n: int, sweep: int, *, batch: int = 4,
+                         seed: int = 0, k: int = 3, sim_every: int = 5,
+                         mesh=None) -> Callable[[Candidate], object]:
+    """``make_runner(candidate)`` for the **sweep-shaped** tiny-MLP Morph
+    workload: ``sweep`` seed-varied trajectories vmapped into one
+    dispatch (``repro.dlrt.SweepSuperstep``, DESIGN.md §14).
+
+    The sweep engine's only tunable knob is ``chunk`` (its data plane is
+    pinned to the dense gather path), so drive :func:`repro.tune.tune`
+    with an explicit ``TuneShape(..., sweep=sweep)`` and a chunk-only
+    candidate list.  Each returned adapter exposes the tuner's engine
+    surface (``_make_engine`` / ``cfg``) and builds a fresh
+    :class:`~repro.dlrt.SweepSuperstep` per candidate.
+    """
+    from ..core import InGraphMorphStrategy
+    from ..data import (DeviceDataStream, dirichlet_partition,
+                        make_image_classification, train_test_split)
+    from ..dlrt import RunnerConfig, SweepSpec, SweepSuperstep
+    from ..models.tiny import mlp_loss, mlp_params
+    from ..optim import sgd
+
+    rng = np.random.default_rng(seed)
+    ds = make_image_classification(max(600, n * 20), num_classes=4,
+                                   image_size=8, seed=seed)
+    tr, te = train_test_split(ds, 0.25)
+    parts = dirichlet_partition(tr.labels, n, 0.5, rng)
+    test = {"images": te.images[:64], "labels": te.labels[:64]}
+    spec = SweepSpec(seeds=tuple(range(seed, seed + sweep)))
+    cfg = RunnerConfig(n_nodes=n, rounds=10 ** 9, eval_every=10 ** 9,
+                       sim_every=sim_every, seed=seed)
+
+    def make_runner(cand: Candidate):
+        class _SweepAdapter:
+            """Tuner-facing shim: builds the sweep engine lazily with
+            the candidate's chunk."""
+            def __init__(self):
+                self.cfg = cfg
+
+            def _make_engine(self):
+                streams = [DeviceDataStream(ds=tr, parts=parts,
+                                            batch_size=batch, seed=s)
+                           for s in spec.seeds]
+                strategies = [InGraphMorphStrategy(n=n, k=k,
+                                                   view_size=k + 2,
+                                                   seed=s)
+                              for s in spec.seeds]
+                return SweepSuperstep(
+                    spec=spec, init_fn=mlp_params, loss_fn=mlp_loss,
+                    eval_fn=mlp_loss, optimizer=sgd(0.05),
+                    streams=streams, test_batch=test,
+                    strategies=strategies, cfg=cfg, mesh=mesh,
+                    chunk=cand.chunk)
+
+        return _SweepAdapter()
+
+    return make_runner

@@ -1,0 +1,163 @@
+"""tools/check_bench.py: the benchmark regression gate's own behavior.
+
+Covers the tolerance math on the hard HLO-cost columns, the
+jax/backend-mismatch downgrade to warnings, ``--update`` baseline
+regeneration, and the malformed-BENCH-record failure path (a schema
+violation must become a reported failure, not a traceback).
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    Path(__file__).resolve().parent.parent / "tools" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+def write_bench(dirpath: Path, name="figx", *, flops=100.0, jax="1.0",
+                backend="cpu", records=None, wall=None):
+    payload = {
+        "schema_version": 1, "name": name, "created_unix": 0.0,
+        "backend": backend, "jax": jax,
+        "records": records if records is not None else [
+            {"key": "engine/n8",
+             "hlo": {"flops": flops, "bytes": 10.0,
+                     "collective_bytes": 0.0, "op_count_total": 50},
+             **({"wall_clock_s": wall} if wall else {})}],
+    }
+    dirpath.mkdir(parents=True, exist_ok=True)
+    path = dirpath / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload) + "\n")
+    return path
+
+
+def run(tmp_path, **kw):
+    return check_bench.main(
+        ["--bench-dir", str(tmp_path / "out"),
+         "--baseline-dir", str(tmp_path / "base")]
+        + kw.pop("extra", []))
+
+
+# ---------------------------------------------------------------------------
+# Tolerance math
+# ---------------------------------------------------------------------------
+
+def test_within_tolerance_passes(tmp_path, capsys):
+    write_bench(tmp_path / "base", flops=100.0)
+    write_bench(tmp_path / "out", flops=140.0)   # +40% < default 50%
+    assert run(tmp_path) == 0
+    assert "FAIL" not in capsys.readouterr().out
+
+
+def test_regression_beyond_tolerance_fails(tmp_path, capsys):
+    write_bench(tmp_path / "base", flops=100.0)
+    write_bench(tmp_path / "out", flops=160.0)   # +60% > 50%
+    assert run(tmp_path) == 1
+    assert "hlo.flops" in capsys.readouterr().out
+
+
+def test_custom_tolerance_is_respected(tmp_path):
+    write_bench(tmp_path / "base", flops=100.0)
+    write_bench(tmp_path / "out", flops=140.0)
+    assert run(tmp_path, extra=["--tol", "0.2"]) == 1
+
+
+def test_improvement_warns_but_passes(tmp_path, capsys):
+    write_bench(tmp_path / "base", flops=100.0)
+    write_bench(tmp_path / "out", flops=10.0)    # -90% improvement
+    assert run(tmp_path) == 0
+    assert "improved" in capsys.readouterr().out
+
+
+def test_zero_baseline_appearance_fails(tmp_path, capsys):
+    """collective_bytes=0 baselines gate any nonzero appearance."""
+    write_bench(tmp_path / "base")
+    base = tmp_path / "out"
+    write_bench(base, records=[
+        {"key": "engine/n8",
+         "hlo": {"flops": 100.0, "bytes": 10.0,
+                 "collective_bytes": 64.0, "op_count_total": 50}}])
+    assert run(tmp_path) == 1
+    assert "collective_bytes" in capsys.readouterr().out
+
+
+def test_wall_clock_is_warn_only(tmp_path, capsys):
+    write_bench(tmp_path / "base", wall=1.0)
+    write_bench(tmp_path / "out", wall=100.0)
+    assert run(tmp_path) == 0
+    assert "warn-only" in capsys.readouterr().out
+
+
+def test_missing_section_and_record_fail(tmp_path):
+    write_bench(tmp_path / "base")
+    (tmp_path / "out").mkdir()
+    assert run(tmp_path) == 1                      # file missing
+    write_bench(tmp_path / "out", records=[
+        {"key": "something/else"}])
+    assert run(tmp_path) == 1                      # record disappeared
+
+
+# ---------------------------------------------------------------------------
+# Environment-mismatch downgrade
+# ---------------------------------------------------------------------------
+
+def test_env_mismatch_downgrades_hard_failures(tmp_path, capsys):
+    write_bench(tmp_path / "base", flops=100.0, jax="0.9")
+    write_bench(tmp_path / "out", flops=1000.0, jax="1.0")
+    assert run(tmp_path) == 0
+    out = capsys.readouterr().out
+    assert "downgraded to warnings" in out
+    assert "FAIL" not in out
+
+
+# ---------------------------------------------------------------------------
+# --update
+# ---------------------------------------------------------------------------
+
+def test_update_overwrites_and_creates_baselines(tmp_path, capsys):
+    write_bench(tmp_path / "base", name="figx", flops=100.0)
+    write_bench(tmp_path / "out", name="figx", flops=10.0)
+    write_bench(tmp_path / "out", name="fignew", flops=5.0)
+    assert run(tmp_path, extra=["--update"]) == 0
+    out = capsys.readouterr().out
+    assert "UPDATED" in out and "CREATED" in out
+    refreshed = json.loads(
+        (tmp_path / "base" / "BENCH_figx.json").read_text())
+    assert refreshed["records"][0]["hlo"]["flops"] == 10.0
+    assert (tmp_path / "base" / "BENCH_fignew.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# Malformed records
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("records", [
+    [{"hlo": {"flops": 1.0}}],       # no "key"
+    ["not-a-dict"],                  # record isn't an object
+])
+def test_malformed_record_is_reported_not_raised(tmp_path, capsys,
+                                                 records):
+    write_bench(tmp_path / "base")
+    write_bench(tmp_path / "out", records=records)
+    assert run(tmp_path) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "schema violation" in out
+
+
+def test_invalid_json_is_reported_not_raised(tmp_path, capsys):
+    write_bench(tmp_path / "base")
+    out_dir = tmp_path / "out"
+    out_dir.mkdir()
+    (out_dir / "BENCH_figx.json").write_text("{nope")
+    assert run(tmp_path) == 1
+    assert "not valid JSON" in capsys.readouterr().out
+
+
+def test_no_baselines_is_an_error(tmp_path):
+    (tmp_path / "base").mkdir()
+    (tmp_path / "out").mkdir()
+    assert run(tmp_path) == 1

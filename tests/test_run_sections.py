@@ -1,0 +1,41 @@
+"""benchmarks/run.py section selection: the ``--only`` flag.
+
+An unknown section name must exit with status 2 and print the full
+registry (every registered section) so the error is self-correcting,
+and ``--only`` must accept comma-separated section lists.
+"""
+import pytest
+
+from benchmarks.run import main
+
+EXPECTED_SECTIONS = [
+    "fig2", "fig67", "table1", "fig3", "fig3_accuracy", "fig4", "fig5",
+    "fig8", "fig9", "fig10", "fig11", "fig12", "fig13_compress",
+    "fig14_sweep", "kernels", "roofline",
+]
+
+
+def test_unknown_only_lists_every_section(capsys):
+    assert main(["--only", "nope"]) == 2
+    err = capsys.readouterr().err
+    assert "unknown section" in err and "'nope'" in err
+    for name in EXPECTED_SECTIONS:
+        assert name in err, f"registry listing is missing {name!r}"
+
+
+def test_unknown_name_in_comma_list_rejected(capsys):
+    assert main(["--only", "fig9,bogus,fig14_sweep"]) == 2
+    err = capsys.readouterr().err
+    assert "'bogus'" in err
+    # the valid names in the list are not the problem
+    assert "'fig9'" not in err and "'fig14_sweep'" not in err
+
+
+def test_comma_list_with_blanks_tolerated(capsys):
+    """Trailing/doubled commas don't invent empty section names."""
+    assert main(["--only", "nope,,"]) == 2
+    assert "''" not in capsys.readouterr().err
+
+
+def test_full_and_smoke_are_mutually_exclusive(capsys):
+    assert main(["--full", "--smoke"]) == 2

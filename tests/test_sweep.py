@@ -1,0 +1,272 @@
+"""Sweep-farm conformance (DESIGN.md §14).
+
+Headline contract: a :class:`repro.dlrt.SweepSuperstep` running E
+experiments inside one vmapped ``lax.scan`` dispatch is **bitwise**
+identical, experiment by experiment, to the same E experiments run
+independently through :class:`repro.dlrt.CompiledSuperstep` on the
+dense gather path — params, negotiated edges, comm bytes, delivered
+masks and staleness accounting, with or without the folded network
+model, including a swept ``delta_r`` hyperparameter axis.
+
+The multi-device exp-axis sharding case re-runs this file in a
+subprocess with forced host devices, like the §8 sharded tests.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import InGraphMorphStrategy, InGraphStaticStrategy
+from repro.data import (DeviceDataStream, dirichlet_partition,
+                        make_image_classification, train_test_split)
+from repro.dlrt import (CompiledSuperstep, RunnerConfig, SweepSpec,
+                        SweepSuperstep)
+from repro.launch.mesh import make_sweep_mesh
+from repro.models.tiny import mlp_loss, mlp_params
+from repro.netsim import DenseNetwork, SweepNetwork, profiles
+from repro.optim import sgd
+
+N, ROUNDS, K = 5, 8, 2
+MULTIDEV = jax.device_count() >= 2
+
+_ds = make_image_classification(200, num_classes=4, image_size=8, seed=0)
+_tr, _te = train_test_split(_ds, 0.25)
+_parts = dirichlet_partition(_tr.labels, N, 0.5,
+                             np.random.default_rng(0))
+_test = {"images": _te.images[:24], "labels": _te.labels[:24]}
+
+
+def _stream(seed):
+    return DeviceDataStream(ds=_tr, parts=_parts, batch_size=4, seed=seed)
+
+
+def _morph(seed, delta_r=2):
+    return InGraphMorphStrategy(n=N, k=K, view_size=K + 2, seed=seed,
+                                delta_r=delta_r)
+
+
+def _single(seed, *, delta_r=2, net=None, rounds=ROUNDS):
+    cfg = RunnerConfig(n_nodes=N, rounds=rounds, eval_every=4,
+                       sim_every=2, seed=seed)
+    eng = CompiledSuperstep(
+        init_fn=mlp_params, loss_fn=mlp_loss, eval_fn=mlp_loss,
+        optimizer=sgd(0.05), batcher=None, data_stream=_stream(seed),
+        test_batch=_test, strategy=_morph(seed, delta_r), cfg=cfg,
+        net=net)
+    log = eng.run()
+    return eng, log
+
+
+def _sweep(spec, *, delta_rs=None, net=None, rounds=ROUNDS, mesh=None):
+    cfg = RunnerConfig(n_nodes=N, rounds=rounds, eval_every=4,
+                       sim_every=2)
+    drs = delta_rs or [2] * len(spec)
+    return SweepSuperstep(
+        spec=spec, init_fn=mlp_params, loss_fn=mlp_loss,
+        eval_fn=mlp_loss, optimizer=sgd(0.05),
+        streams=[_stream(s) for s in spec.seeds], test_batch=_test,
+        strategies=[_morph(s, d) for s, d in zip(spec.seeds, drs)],
+        cfg=cfg, net=net, mesh=mesh)
+
+
+def _assert_experiment_bitwise(single, sweep, e):
+    for a, b in zip(jax.tree_util.tree_leaves(single.params),
+                    jax.tree_util.tree_leaves(
+                        jax.tree_util.tree_map(lambda x: x[e],
+                                               sweep.params))):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"experiment {e}: params diverged"
+    assert len(single.edge_history) == len(sweep.edge_history[e])
+    for r, (ea, eb) in enumerate(zip(single.edge_history,
+                                     sweep.edge_history[e])):
+        assert np.array_equal(ea, eb), \
+            f"experiment {e}: edges diverged at round {r}"
+    assert single._comm_bytes == sweep.comm_bytes(e)
+
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+
+def test_spec_grid_cross_product():
+    spec = SweepSpec.grid(seeds=[0, 1, 2], profiles=["ideal", "wan"])
+    assert len(spec) == 6
+    # seeds vary fastest within each profile block
+    assert spec.seeds == (0, 1, 2, 0, 1, 2)
+    assert spec.profiles == ("ideal",) * 3 + ("wan",) * 3
+    assert spec.describe(4) == {"seed": 1, "profile": "wan"}
+
+
+def test_spec_axis_length_mismatch_rejected():
+    with pytest.raises(ValueError):
+        SweepSpec(seeds=(0, 1), delta_r=(2,))
+
+
+# ---------------------------------------------------------------------------
+# Bitwise pins: one vmapped dispatch == E independent dispatches
+# ---------------------------------------------------------------------------
+
+def test_sweep_matches_singles_bitwise_with_hp_axis():
+    """No network model; the delta_r axis is swept, so the topology-
+    refresh cadence differs per experiment inside one dispatch."""
+    seeds, drs = (0, 1, 2), (2, 3, 5)
+    singles = [_single(s, delta_r=d) for s, d in zip(seeds, drs)]
+    sweep = _sweep(SweepSpec(seeds=seeds, delta_r=drs), delta_rs=drs)
+    logs = sweep.run()
+    for e, (eng, log) in enumerate(singles):
+        _assert_experiment_bitwise(eng, sweep, e)
+        assert [r.mean_accuracy for r in log.records] == \
+            [r.mean_accuracy for r in logs[e].records]
+
+
+def test_sweep_matches_singles_bitwise_with_net():
+    """Mixed ideal/wan profiles at equal ring depth: delivery masks,
+    staleness accounting and comm bytes all pin bitwise."""
+    seeds = (0, 1, 2)
+    nets = [DenseNetwork(profiles.get_profile(p, N, s), round_s=1.0)
+            for s, p in zip(seeds, ("ideal", "wan", "wan"))]
+    singles = [_single(s, net=m)[0] for s, m in zip(seeds, nets)]
+    sweep = _sweep(SweepSpec(seeds=seeds), net=SweepNetwork(nets))
+    sweep.run()
+    for e, eng in enumerate(singles):
+        _assert_experiment_bitwise(eng, sweep, e)
+        assert all(np.array_equal(a, b) for a, b in
+                   zip(eng.delivered_history,
+                       sweep.delivered_history[e]))
+        assert eng.net_stats["delivered"] == \
+            sweep.net_stats[e]["delivered"]
+        assert eng.net_stats["staleness_sum"] == \
+            sweep.net_stats[e]["staleness_sum"]
+
+
+@pytest.mark.slow
+def test_sweep_matches_singles_bitwise_deep_ring():
+    """Equal-depth S=2 ring (all-wan, sub-round round_s): the staleness
+    clamp and multi-slot history contraction pin bitwise too."""
+    seeds = (0, 1)
+    nets = [DenseNetwork(profiles.wan(seed=s), round_s=0.05,
+                         max_staleness=4) for s in seeds]
+    singles = [_single(s, net=m)[0] for s, m in zip(seeds, nets)]
+    sweep = _sweep(SweepSpec(seeds=seeds), net=SweepNetwork(nets))
+    sweep.run()
+    for e, eng in enumerate(singles):
+        _assert_experiment_bitwise(eng, sweep, e)
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+def test_stream_count_must_match_spec():
+    spec = SweepSpec(seeds=(0, 1, 2))
+    with pytest.raises(ValueError):
+        SweepSuperstep(
+            spec=spec, init_fn=mlp_params, loss_fn=mlp_loss,
+            eval_fn=mlp_loss, optimizer=sgd(0.05),
+            streams=[_stream(0)], test_batch=_test,
+            strategies=[_morph(s) for s in spec.seeds],
+            cfg=RunnerConfig(n_nodes=N, rounds=ROUNDS))
+
+
+def test_hp_axis_requires_sweepable_strategy():
+    """A delta_r axis needs ``sweep_graph_round``; the static baseline
+    has no hyperparameters to sweep."""
+    spec = SweepSpec(seeds=(0, 1), delta_r=(2, 3))
+    with pytest.raises(TypeError):
+        SweepSuperstep(
+            spec=spec, init_fn=mlp_params, loss_fn=mlp_loss,
+            eval_fn=mlp_loss, optimizer=sgd(0.05),
+            streams=[_stream(s) for s in spec.seeds], test_batch=_test,
+            strategies=[InGraphStaticStrategy(n=N, degree=2, seed=s)
+                        for s in spec.seeds],
+            cfg=RunnerConfig(n_nodes=N, rounds=ROUNDS))
+
+
+def test_sweep_mesh_over_capacity_rejected():
+    with pytest.raises(ValueError):
+        make_sweep_mesh(jax.local_device_count() + 1)
+
+
+# ---------------------------------------------------------------------------
+# Mesh: exp-axis sharding (size-1 mesh in-process; real devices in the
+# spawned run)
+# ---------------------------------------------------------------------------
+
+def test_sweep_one_device_mesh_matches_unsharded():
+    seeds = (0, 1)
+    ref = _sweep(SweepSpec(seeds=seeds))
+    ref.run()
+    sh = _sweep(SweepSpec(seeds=seeds), mesh=make_sweep_mesh(1, 1))
+    sh.run()
+    for e in range(len(seeds)):
+        for a, b in zip(
+                jax.tree_util.tree_leaves(
+                    jax.tree_util.tree_map(lambda x: x[e], ref.params)),
+                jax.tree_util.tree_leaves(
+                    jax.tree_util.tree_map(lambda x: x[e], sh.params))):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert all(np.array_equal(x, y) for x, y in
+                   zip(ref.edge_history[e], sh.edge_history[e]))
+
+
+needs_multidev = pytest.mark.skipif(
+    not MULTIDEV, reason="needs >= 2 devices (run via "
+    "test_spawn_sweep_sharded)")
+
+
+@needs_multidev
+def test_multidev_exp_sharded_matches_singles():
+    """E=4 experiments over a 2-device exp axis still pin bitwise
+    against independent single-engine runs."""
+    seeds = (0, 1, 2, 3)
+    singles = [_single(s)[0] for s in seeds]
+    sweep = _sweep(SweepSpec(seeds=seeds), mesh=make_sweep_mesh(2, 1))
+    sweep.run()
+    for e, eng in enumerate(singles):
+        _assert_experiment_bitwise(eng, sweep, e)
+
+
+@pytest.mark.slow
+def test_spawn_sweep_sharded():
+    """Re-run the _multidev test on simulated host devices (device count
+    is fixed at backend init, so it needs a fresh process)."""
+    if MULTIDEV:
+        pytest.skip("already multi-device; _multidev tests ran directly")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         __file__, "-k", "multidev"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, \
+        f"sharded sweep run failed:\n{proc.stdout}\n{proc.stderr}"
+    assert " passed" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Tuner surface
+# ---------------------------------------------------------------------------
+
+def test_tune_shape_sweep_key_backward_compatible():
+    from repro.tune import TuneShape
+    base = TuneShape(backend="cpu", n=16, d=100)
+    assert base.key() == "cpu|n=16|d=100|devices=1|net=0"
+    swept = TuneShape(backend="cpu", n=16, d=100, sweep=32)
+    assert swept.key() == "cpu|n=16|d=100|devices=1|net=0|sweep=32"
+
+
+def test_sweep_runner_factory_builds_engine():
+    from repro.tune import sweep_runner_factory
+    from repro.tune.space import Candidate
+    make = sweep_runner_factory(N, 2, batch=4)
+    adapter = make(Candidate(chunk=2))
+    engine = adapter._make_engine()
+    assert isinstance(engine, SweepSuperstep)
+    assert engine.E == 2
+    assert engine.chunk == 2

@@ -38,10 +38,23 @@ SOFT_FIELDS = ("rounds_per_sec", "wall_clock_s")
 WALL_WARN_RATIO = 1.5
 
 
+class MalformedBench(Exception):
+    """A BENCH file whose records don't follow the harness schema."""
+
+
 def load(path: Path):
     with open(path) as f:
-        payload = json.load(f)
-    records = {r["key"]: r for r in payload.get("records", [])}
+        try:
+            payload = json.load(f)
+        except json.JSONDecodeError as exc:
+            raise MalformedBench(f"{path.name}: not valid JSON ({exc})")
+    records = {}
+    for i, r in enumerate(payload.get("records", [])):
+        if not isinstance(r, dict) or "key" not in r:
+            raise MalformedBench(
+                f"{path.name}: record #{i} has no 'key' field "
+                "(harness schema violation)")
+        records[r["key"]] = r
     return payload, records
 
 
@@ -85,8 +98,12 @@ def main(argv=None) -> int:
             fail(f"{bpath.name}: missing from {bench_dir} "
                  "(section not run?)")
             continue
-        bpay, brecs = load(bpath)
-        npay, nrecs = load(npath)
+        try:
+            bpay, brecs = load(bpath)
+            npay, nrecs = load(npath)
+        except MalformedBench as exc:
+            fail(str(exc))
+            continue
         env_match = (bpay.get("jax") == npay.get("jax")
                      and bpay.get("backend") == npay.get("backend"))
         hard = fail if env_match else warn

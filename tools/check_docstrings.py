@@ -2,8 +2,8 @@
 """Fail on missing public docstrings (pydocstyle D1xx subset, stdlib-only).
 
 Walks the given packages (default: the public API surface ``src/repro/
-dlrt`` and ``src/repro/core``) and reports every public module, class,
-function and method without a docstring.  "Public" = name without a
+dlrt`` and ``src/repro/core``, plus ``benchmarks``) and reports every
+public module, class, function and method without a docstring.  "Public" = name without a
 leading underscore, reachable without crossing a private scope; function
 bodies are never descended into.  Dataclass/NamedTuple field assignments
 don't count as missing; ``__init__`` and other dunders are exempt except
@@ -18,7 +18,7 @@ import ast
 import sys
 from pathlib import Path
 
-DEFAULT_PATHS = ["src/repro/dlrt", "src/repro/core"]
+DEFAULT_PATHS = ["src/repro/dlrt", "src/repro/core", "benchmarks"]
 
 
 def _missing(tree: ast.Module, rel: str) -> list:
